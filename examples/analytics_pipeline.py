@@ -1,0 +1,53 @@
+"""In-database analytics (the MonetDB integration, paper §II/III):
+a TPC-H-flavoured select -> join -> aggregate plan plus in-database ML,
+all through the columnar engine's UDF surface.
+
+    PYTHONPATH=src python examples/analytics_pipeline.py
+"""
+import numpy as np
+
+from repro.columnar import engine, udf
+from repro.columnar.table import Table
+from repro.core.channels import plan
+from repro.core.sgd_glm import HyperParams
+from repro.launch.mesh import make_host_mesh
+
+rng = np.random.default_rng(1)
+mesh = make_host_mesh()
+p = plan(mesh, "model")
+
+n = 1 << 16
+lineitem = Table.from_arrays("lineitem", {
+    "orderkey": rng.integers(0, 20_000, size=n).astype(np.int32),
+    "quantity": rng.integers(1, 50, size=n).astype(np.int32),
+    "price": rng.integers(100, 10_000, size=n).astype(np.int32),
+}).place(p)
+orders = Table.from_arrays("orders", {
+    "orderkey": np.arange(0, 40_000, 2, dtype=np.int32),   # even keys exist
+})
+
+# SELECT sum(price) FROM lineitem JOIN orders USING (orderkey)
+#  WHERE quantity BETWEEN 30 AND 49
+sel = udf.call("select_range", lineitem, "quantity", 30, 49)
+filtered = engine.gather(lineitem, sel.column("idx"),
+                         ["orderkey", "price"], name="filtered")
+filtered = filtered.place(p)
+j = udf.call("join", filtered, orders, "orderkey")
+proj = engine.gather(filtered, j.column("l_idx"), ["price"])
+total = udf.call("aggregate_sum", proj, "price")
+print(f"query: {sel.num_rows} rows pass the filter, {j.num_rows} join, "
+      f"sum(price) = {total:.0f}")
+
+# in-database ML (doppioDB-style UDF): predict high-price rows
+features = Table.from_arrays("feat", {
+    "f0": rng.uniform(-1, 1, size=2048).astype(np.float32),
+    "f1": rng.uniform(-1, 1, size=2048).astype(np.float32),
+    "f2": rng.uniform(-1, 1, size=2048).astype(np.float32),
+    "y": (rng.uniform(size=2048) > 0.5).astype(np.float32),
+})
+xs, losses = udf.call("train_glm", features, ["f0", "f1", "f2"], "y",
+                      [HyperParams(0.1, 0.0), HyperParams(0.3, 1e-3)],
+                      p, epochs=5)
+print(f"train_glm UDF: {len(losses)} models, losses = "
+      f"{[round(float(l), 4) for l in losses]}")
+print(f"registered UDFs: {udf.registered()}")

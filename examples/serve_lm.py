@@ -1,0 +1,47 @@
+"""Serving example: batched prefill + greedy decode loop with the
+sequence-sharded (flash-decoding) KV cache layout.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeConfig, get_arch, smoke_config
+from repro.distributed.sharding import resolve
+from repro.launch.mesh import make_host_mesh
+from repro.models import registry
+from repro.train.train_loop import make_decode_step, make_prefill_step
+
+ARCH = "llama3-8b"
+PROMPT_LEN, GEN_LEN, BATCH = 24, 12, 4
+
+cfg = smoke_config(get_arch(ARCH))
+mesh = make_host_mesh()
+max_len = PROMPT_LEN + GEN_LEN
+shape = ShapeConfig("serve", max_len, BATCH, "prefill")
+rules = resolve(cfg, mesh, shape)
+mb = registry.bundle(cfg)
+
+with jax.set_mesh(mesh):
+    params = mb.materialize_params(jax.random.key(0), tp=1)
+    prompts = jax.random.randint(jax.random.key(1), (BATCH, PROMPT_LEN), 0,
+                                 cfg.vocab_size, jnp.int32)
+    caches = registry.make_cache(cfg, shape, rules)
+
+    prefill = jax.jit(make_prefill_step(mb, rules))
+    decode = jax.jit(make_decode_step(mb, rules), donate_argnums=(2,))
+
+    logits, caches = prefill(params, {"tokens": prompts}, caches)
+    tok = jnp.argmax(logits[..., :cfg.vocab_size], axis=-1).astype(jnp.int32)
+    out = [tok]
+    for i in range(GEN_LEN - 1):
+        pos = jnp.asarray(PROMPT_LEN + i, jnp.int32)
+        tok, logits, caches = decode(params, {"tokens": tok, "pos": pos},
+                                     caches)
+        out.append(tok)
+    gen = jnp.concatenate(out, axis=1)
+    print(f"prompts {prompts.shape} -> generated {gen.shape}")
+    for b in range(BATCH):
+        print(f"  seq{b}: {list(map(int, gen[b]))}")
+    print("greedy decode is deterministic:",
+          bool((gen[0] == gen[0]).all()))

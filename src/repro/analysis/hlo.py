@@ -1,0 +1,130 @@
+"""Parse collective traffic out of compiled (post-SPMD, per-device) HLO text.
+
+``cost_analysis()`` gives per-device FLOPs and bytes but not collective
+traffic, so we scan the optimized module for all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops and sum their operand
+sizes (the §Roofline-prescribed metric).  We additionally report a
+ring-model "wire bytes" estimate per op kind:
+
+    all-gather      operand = result / g     wire ~ result * (g-1)/g
+    all-reduce      operand = result         wire ~ 2 * result * (g-1)/g
+    reduce-scatter  operand = result * g     wire ~ operand * (g-1)/g
+    all-to-all      operand = result         wire ~ operand * (g-1)/g
+    collective-permute operand = result      wire = operand
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# "f32[256,512]{1,0}" or "bf16[8]" or scalar "f32[]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# "replica_groups=[2,4]<=[8]" (iota) or "replica_groups={{0,1},{2,3}}"
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(line: str) -> int:
+    """Sum all shapes on the result side (handles tuple results)."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    # result type(s) appear before the op name token
+    head = lhs[1]
+    for c in _COLLECTIVES:
+        idx = head.find(c)
+        if idx > 0:
+            head = head[:idx]
+            break
+    return sum(_shape_bytes(m.group(1), m.group(2))
+               for m in _SHAPE_RE.finditer(head))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    operand_bytes: dict          # per op kind, per-device
+    wire_bytes: dict             # ring-model estimate, per-device
+    counts: dict
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return float(sum(self.operand_bytes.values()))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.wire_bytes.values()))
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    operand = defaultdict(float)
+    wire = defaultdict(float)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        kind = None
+        for c in _COLLECTIVES:
+            # match "= <type> all-reduce(" and async "all-reduce-start("
+            if f" {c}(" in line or f" {c}-start(" in line:
+                kind = c
+                break
+        if kind is None:
+            continue
+        rb = _result_bytes(line)
+        g = max(_group_size(line), 1)
+        if kind == "all-gather":
+            op_b = rb / g
+            w_b = rb * (g - 1) / g
+        elif kind == "all-reduce":
+            op_b = rb
+            w_b = 2.0 * rb * (g - 1) / g
+        elif kind == "reduce-scatter":
+            op_b = rb * g
+            w_b = op_b * (g - 1) / g
+        elif kind == "all-to-all":
+            op_b = rb
+            w_b = rb * (g - 1) / g
+        else:  # collective-permute
+            op_b = rb
+            w_b = rb
+        operand[kind] += op_b
+        wire[kind] += w_b
+        counts[kind] += 1
+    return CollectiveStats(dict(operand), dict(wire), dict(counts))
+
+
+def op_histogram(hlo_text: str, top: int = 25) -> list[tuple[str, int]]:
+    """Count HLO opcodes — used to spot remat-duplicated work and layout ops."""
+    counts: dict[str, int] = defaultdict(int)
+    opcode_re = re.compile(r"= (?:\([^)]*\) )?[\w\[\],{}]+ ([a-z][\w-]*)\(")
+    for line in hlo_text.splitlines():
+        m = opcode_re.search(line)
+        if m:
+            counts[m.group(1)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

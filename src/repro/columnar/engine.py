@@ -1,0 +1,75 @@
+"""Physical operators over the column store, backed by the accelerated cores.
+
+This is the integration layer the paper builds into MonetDB: operators take
+and return Tables; the FPGA roles are played by the mesh engines
+(core.selection / core.join / core.sgd_glm), selected per operator exactly
+like MonetDB's optimizer picks the UDF implementation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.columnar.table import Column, Table
+from repro.core import join as join_core
+from repro.core import selection as sel_core
+from repro.core import sgd_glm
+from repro.core.channels import ChannelPlan
+
+
+def scan(table: Table, columns: Sequence[str]) -> Table:
+    return Table(table.name, {c: table.columns[c] for c in columns},
+                 table.plan)
+
+
+def select_range(table: Table, column: str, lo: int, hi: int, *,
+                 impl: str = "xla", block: int = 1024) -> Table:
+    """Range selection -> materialized index column (with count)."""
+    assert table.plan is not None, "place() the table first"
+    idx, counts = sel_core.select_distributed(
+        table.column(column), lo, hi, table.plan, block=block, impl=impl)
+    flat = idx.reshape(-1)
+    order = jnp.argsort(flat == -1, stable=True)
+    n = int(jnp.sum(counts))
+    compacted = flat[order][:n]
+    return Table(f"{table.name}.sel", {"idx": Column(compacted, "idx")})
+
+
+def join(left: Table, right: Table, on: str, *, impl: str = "xla") -> Table:
+    """Inner join: right is the small (build) side.  Returns matched index
+    pairs (l_idx, r_idx) — MonetDB's join produces exactly such BAT pairs."""
+    assert left.plan is not None
+    s_idx, total = join_core.join_distributed(
+        right.column(on), left.column(on), left.plan, impl=impl)
+    hit = s_idx >= 0
+    order = jnp.argsort(~hit, stable=True)
+    n = int(total)
+    l_idx = jnp.arange(left.num_rows, dtype=jnp.int32)[order][:n]
+    r_idx = s_idx[order][:n]
+    return Table("join", {"l_idx": Column(l_idx, "l_idx"),
+                          "r_idx": Column(r_idx, "r_idx")})
+
+
+def gather(table: Table, idx: jax.Array, columns: Sequence[str],
+           name: str = "proj") -> Table:
+    cols = {c: Column(jnp.take(table.column(c), idx, axis=0), c)
+            for c in columns}
+    return Table(name, cols)
+
+
+def aggregate_sum(table: Table, column: str) -> float:
+    return float(jnp.sum(table.column(column)))
+
+
+def train_glm(table: Table, features: Sequence[str], label: str,
+              grid, plan: ChannelPlan, *, kind: str = "logreg",
+              epochs: int = 5, impl: str = "xla"):
+    """In-database ML (paper §VI): hyper-parameter search over GLMs on
+    columns of a table — the doppioDB-style UDF."""
+    a = jnp.stack([table.column(f).astype(jnp.float32) for f in features],
+                  axis=1)
+    b = table.column(label).astype(jnp.float32)
+    return sgd_glm.hyperparam_search(a, b, grid, plan, kind=kind,
+                                     epochs=epochs, impl=impl)

@@ -1,0 +1,57 @@
+"""A minimal column-store — the MonetDB integration surface (paper §II/III).
+
+Tables are dicts of device-resident int32/float32 columns; placement per
+column follows a ChannelPlan (the paper's data-partitioning decision).
+Intermediate results materialize eagerly, like MonetDB's BAT algebra.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channels import ChannelPlan
+
+
+@dataclasses.dataclass
+class Column:
+    data: jax.Array                    # (N,)
+    name: str
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def __len__(self):
+        return int(self.data.shape[0])
+
+
+@dataclasses.dataclass
+class Table:
+    name: str
+    columns: dict[str, Column]
+    plan: Optional[ChannelPlan] = None
+
+    @property
+    def num_rows(self) -> int:
+        return len(next(iter(self.columns.values())))
+
+    def column(self, name: str) -> jax.Array:
+        return self.columns[name].data
+
+    def place(self, plan: ChannelPlan) -> "Table":
+        """Partition every column per the channel plan (paper's runtime
+        partitioning; the shim's static merging is the sharding layout)."""
+        cols = {k: Column(plan.place(c.data), k)
+                for k, c in self.columns.items()}
+        return Table(self.name, cols, plan)
+
+    @staticmethod
+    def from_arrays(name: str, arrays: Mapping[str, np.ndarray]) -> "Table":
+        cols = {k: Column(jnp.asarray(v), k) for k, v in arrays.items()}
+        n = {len(c) for c in cols.values()}
+        assert len(n) == 1, "ragged table"
+        return Table(name, cols)

@@ -1,0 +1,97 @@
+"""Channel-aware placement planner — the paper's Fig. 2 lesson as code.
+
+On the AD9H7 the 8 GiB HBM is 32 pseudo-channels x 256 MiB; peak bandwidth
+needs every port on its own channel.  On a TPU mesh the "channels" are the
+per-chip HBM stacks: this module assigns column shards to devices
+(round-robin, contiguous ranges — the paper's `offset = S x 1MiB x (id-1)`
+formula generalized), and can deliberately emit the CONGESTED placement
+(every engine reading the same chip's shard) used by the Fig. 5 "non-
+partitioned" baselines.
+
+It also carries the paper's analytical bandwidth model, calibrated to the
+AD9H7 microbenchmark numbers, used by benchmarks/fig2 to reproduce the
+published curves and by the planner to predict layout quality on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# --- paper hardware model (AD9H7, 2 stacks x 16 pseudo channels) ----------- #
+N_PORTS = 32
+CHANNEL_MIB = 256
+PORT_GBPS_200 = 190.0 / 32      # per-port ideal at 200 MHz (meas. Fig. 2)
+PORT_GBPS_300 = 282.0 / 32
+# a hammered channel sustains more than one port's share but far less than
+# the aggregate: calibrated to the paper's S=0 points (14 / 21 GB/s)
+CHANNEL_GBPS_200 = 14.0
+CHANNEL_GBPS_300 = 21.0
+
+# --- TPU v5e model --------------------------------------------------------- #
+TPU_HBM_GBPS = 819.0
+TPU_ICI_GBPS = 49.5
+
+
+def fpga_bandwidth_model(n_ports: int, separation_mib: int,
+                         clock_mhz: int = 200) -> float:
+    """Aggregate GB/s for the Fig. 2 microbenchmark: n_ports traffic
+    generators, each offset by ``separation_mib`` MiB.  Ports whose address
+    ranges land on the same physical channel share that channel's bandwidth.
+    """
+    port_bw = PORT_GBPS_200 if clock_mhz == 200 else PORT_GBPS_300
+    chan_bw = CHANNEL_GBPS_200 if clock_mhz == 200 else CHANNEL_GBPS_300
+    # which channel does each port's offset land in?
+    chans = [((i * separation_mib) // CHANNEL_MIB) % N_PORTS
+             for i in range(n_ports)]
+    load = np.bincount(chans, minlength=N_PORTS)
+    total = 0.0
+    for ch, n in enumerate(load):
+        if n:
+            total += min(n * port_bw, chan_bw)
+    return total
+
+
+def tpu_bandwidth_model(n_engines: int, partitioned: bool) -> float:
+    """TPU analogue: engines = chips.  Partitioned -> each chip streams its
+    local HBM; congested -> every chip pulls the same chip's shard over ICI
+    (the crossbar-congestion analogue)."""
+    if partitioned:
+        return n_engines * TPU_HBM_GBPS
+    return min(TPU_HBM_GBPS, n_engines * TPU_ICI_GBPS / max(n_engines - 1, 1))
+
+
+Placement = Literal["partitioned", "congested", "replicated"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelPlan:
+    """Placement of a 1-D column across the mesh's 'engine' axis."""
+
+    mesh: Mesh
+    axis: str
+    placement: Placement
+
+    @property
+    def n_engines(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    def sharding(self) -> NamedSharding:
+        if self.placement == "partitioned":
+            return NamedSharding(self.mesh, P(self.axis))
+        return NamedSharding(self.mesh, P())     # replicated / congested
+
+    def place(self, x: jax.Array) -> jax.Array:
+        return jax.device_put(x, self.sharding())
+
+    def predicted_gbps(self) -> float:
+        return tpu_bandwidth_model(self.n_engines,
+                                   self.placement == "partitioned")
+
+
+def plan(mesh: Mesh, axis: str = "data",
+         placement: Placement = "partitioned") -> ChannelPlan:
+    return ChannelPlan(mesh, axis, placement)

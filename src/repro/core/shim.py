@@ -1,0 +1,76 @@
+"""The HBM-shim analogue: lane/VMEM block planning.
+
+The paper's shim statically merges two 256-bit AXI ports into one 512-bit
+port so each engine issues wide, stack-separated bursts.  The TPU analogue
+is picking Pallas block shapes: wide enough to fill the 8x128 vector lanes
+and the MXU's 128-aligned matmul dims, small enough that the double-
+buffered working set fits VMEM (~16 MiB/core on v5e).  Every kernel's
+ops.py asks this module for its block plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+VMEM_BYTES = 16 * 1024 * 1024
+LANES = 128
+SUBLANES = 8
+MXU = 128
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def round_down(x: int, m: int) -> int:
+    return max((x // m) * m, m)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    block: tuple            # chosen block shape
+    vmem_bytes: int         # double-buffered working set
+    n_buffers: int
+
+    @property
+    def fits(self) -> bool:
+        return self.vmem_bytes <= VMEM_BYTES
+
+
+def plan_stream_block(n_elems: int, dtype_bytes: int, *,
+                      n_buffers: int = 2, budget_frac: float = 0.5,
+                      max_block: int = 1 << 20) -> BlockPlan:
+    """1-D streaming block (selection / join probe): the largest lane-aligned
+    block whose double-buffered footprint stays inside the VMEM budget."""
+    budget = int(VMEM_BYTES * budget_frac)
+    block = min(max_block, n_elems)
+    block = round_down(block, SUBLANES * LANES)
+    while block * dtype_bytes * n_buffers > budget and block > SUBLANES * LANES:
+        block //= 2
+    return BlockPlan((block,), block * dtype_bytes * n_buffers, n_buffers)
+
+
+def plan_matmul_block(m: int, n: int, k: int, dtype_bytes: int = 2,
+                      acc_bytes: int = 4) -> BlockPlan:
+    """MXU-aligned (bm, bn, bk) tiling with A/B double-buffered + C resident."""
+    bm, bn, bk = (min(round_up(m, MXU), 512), min(round_up(n, MXU), 512),
+                  min(round_up(k, MXU), 512))
+
+    def footprint(bm, bn, bk):
+        return 2 * (bm * bk + bk * bn) * dtype_bytes + bm * bn * acc_bytes
+
+    while footprint(bm, bn, bk) > VMEM_BYTES // 2:
+        big = max((bm, 0), (bn, 1), (bk, 2))
+        if big[1] == 0:
+            bm = max(bm // 2, MXU)
+        elif big[1] == 1:
+            bn = max(bn // 2, MXU)
+        else:
+            bk = max(bk // 2, MXU)
+        if (bm, bn, bk) == (MXU, MXU, MXU):
+            break
+    return BlockPlan((bm, bn, bk), footprint(bm, bn, bk), 2)
+
+
+def merged_port_width(dtype_bytes: int) -> int:
+    """The paper's 512-bit merged port == one (8, 128) vreg line."""
+    return SUBLANES * LANES * dtype_bytes

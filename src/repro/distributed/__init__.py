@@ -1,0 +1,3 @@
+from repro.distributed import (  # noqa: F401
+    compression, context_parallel, pipeline, sharding,
+)

@@ -1,0 +1,17 @@
+"""Dense-softmax oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q, k, v: (BH, S, D) f32. Returns (BH, S, D)."""
+    s = q.shape[1]
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel for the probe+materialize phase of the hash join
+(paper §V, Fig. 7).
+
+TPU adaptation of the paper's engine: the FPGA replicates the hash table
+16x in URAM because BRAM has ~2 ports; TPU VMEM serves full 8x128 vector
+gathers, so ONE VMEM-resident copy of the table plays the role of all 16
+replicas (DESIGN.md records this as a hardware-assumption change).  The
+probe streams L in VMEM blocks (DMA read), computes the multiplicative
+hash on the VPU, gathers candidate slots, and resolves collisions with a
+compile-time-bounded linear probe — the unrolled depth is the II analogue:
+depth 1 keeps the paper's II=1 unique-S fast path, deeper probes trade
+throughput exactly like the paper's collision handling.  The egress line
+(matched S index or -1 dummy) mirrors the paper's assemble step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+KNUTH = -1640531527            # 2654435761 as int32
+
+
+def _probe_kernel(ht_keys_ref, ht_vals_ref, l_ref, sidx_ref, cnt_ref, *,
+                  probe_depth: int):
+    ts = ht_keys_ref.shape[0]
+    l = l_ref[...]
+    h = (l * jnp.int32(KNUTH)) & jnp.int32(ts - 1)
+    ht_keys = ht_keys_ref[...]
+    ht_vals = ht_vals_ref[...]
+    s_idx = jnp.full(l.shape, -1, jnp.int32)
+    for depth in range(probe_depth):          # bounded probe == paper's II
+        slot = (h + depth) & jnp.int32(ts - 1)
+        cand = jnp.take(ht_keys, slot, axis=0)
+        val = jnp.take(ht_vals, slot, axis=0)
+        hit = (cand == l) & (s_idx < 0)
+        s_idx = jnp.where(hit, val, s_idx)
+    sidx_ref[...] = s_idx
+    cnt_ref[0] = jnp.sum((s_idx >= 0).astype(jnp.int32))
+
+
+def probe_pallas(ht_keys, ht_vals, l_keys, *, block: int = DEFAULT_BLOCK,
+                 probe_depth: int = 4, interpret: bool = False):
+    """Probe L against the VMEM-resident table.
+
+    Returns (s_idx (N_L,) with -1 for misses == the materialized join line
+    with dummies, per-block match counts (N_L/block,))."""
+    n = l_keys.shape[0]
+    assert n % block == 0, (n, block)
+    nb = n // block
+    ts = ht_keys.shape[0]
+    import functools
+    kernel = functools.partial(_probe_kernel, probe_depth=probe_depth)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((ts,), lambda i: (0,)),      # table stays in VMEM
+            pl.BlockSpec((ts,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),   # L stream
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((nb,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ht_keys, ht_vals, l_keys)

@@ -1,0 +1,63 @@
+"""Jit'd end-to-end join (build + probe + materialize) with XLA fallback."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.join import ref
+from repro.kernels.join.join import DEFAULT_BLOCK, probe_pallas
+
+
+MAX_DROPPED = 64      # slow-path buffer for keys the bounded build dropped
+
+
+@partial(jax.jit, static_argnames=("table_size", "probe_depth", "block",
+                                   "impl", "interpret"))
+def hash_join(s_keys, l_keys, *, table_size: int, probe_depth: int = 4,
+              block: int = DEFAULT_BLOCK, impl: str = "xla",
+              interpret: bool = True):
+    """End-to-end naively-partitioned hash join (Algorithm 2).
+
+    Build uses the (cheap, small-S) vectorized sequential-equivalent build;
+    probe is the accelerated phase, exactly like the paper.  Keys the
+    bounded build could not place (rare at load factor <= 0.5) take a
+    direct-compare side path so the join is exact up to MAX_DROPPED drops.
+    Returns (s_idx per L position with -1 dummies, total matches,
+    n_dropped_builds).
+    """
+    ht_keys, ht_vals, placed = ref.build_table(s_keys, table_size,
+                                               probe_depth)
+    if impl == "pallas":
+        s_idx, _ = probe_pallas(ht_keys, ht_vals, l_keys, block=block,
+                                probe_depth=probe_depth, interpret=interpret)
+    else:
+        s_idx, _ = ref.probe_ref(ht_keys, ht_vals, l_keys, probe_depth)
+
+    # slow path: gather (up to MAX_DROPPED) unplaced keys, compare directly
+    n_s = s_keys.shape[0]
+    drop_rank = jnp.cumsum((~placed).astype(jnp.int32)) - 1
+    slot = jnp.where(~placed, jnp.minimum(drop_rank, MAX_DROPPED - 1),
+                     MAX_DROPPED)
+    drop_keys = jnp.full((MAX_DROPPED + 1,), -(2 ** 30), jnp.int32) \
+        .at[slot].set(s_keys)[:MAX_DROPPED]
+    drop_vals = jnp.full((MAX_DROPPED + 1,), -1, jnp.int32) \
+        .at[slot].set(jnp.arange(n_s, dtype=jnp.int32))[:MAX_DROPPED]
+    eq = l_keys[:, None] == drop_keys[None, :]              # (N_L, 64)
+    any_hit = jnp.any(eq, axis=1)
+    which = jnp.argmax(eq, axis=1)
+    s_idx = jnp.where((s_idx < 0) & any_hit, drop_vals[which], s_idx)
+
+    total = jnp.sum((s_idx >= 0).astype(jnp.int32))
+    dropped = jnp.sum(~placed)
+    return s_idx, total, dropped
+
+
+def materialize(s_idx, l_values, s_values):
+    """The paper's materialization: emit matched (S_out, L_out) columns with
+    dummies where s_idx == -1 (lane-aligned like the FPGA's assemble)."""
+    hit = s_idx >= 0
+    s_out = jnp.where(hit, s_values[jnp.clip(s_idx, 0, None)], -1)
+    l_out = jnp.where(hit, l_values, -1)
+    return s_out, l_out

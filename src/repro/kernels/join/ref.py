@@ -1,0 +1,86 @@
+"""Pure-jnp oracle for the naively partitioned hash join (paper Algorithm 2).
+
+Semantics: S (small side, build) and L (large side, probe) are int32 key
+columns.  For every L[i] that equals some S[j], emit the pair (j, i) — the
+materialization step the paper insists on including.  The oracle uses
+sort/searchsorted (CPU-friendly, no hash), the kernel uses the paper's
+hash-table-with-bounded-probing design; tests compare them.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def join_oracle(s_keys, l_keys):
+    """Inner join on unique S. Returns (s_idx (N_L,), match (N_L,) bool):
+    for each L position, the matching S index (or -1)."""
+    order = jnp.argsort(s_keys)
+    s_sorted = s_keys[order]
+    pos = jnp.searchsorted(s_sorted, l_keys)
+    pos = jnp.clip(pos, 0, s_keys.shape[0] - 1)
+    hit = s_sorted[pos] == l_keys
+    s_idx = jnp.where(hit, order[pos], -1)
+    return s_idx, hit
+
+
+def join_count(s_keys, l_keys):
+    _, hit = join_oracle(s_keys, l_keys)
+    return jnp.sum(hit.astype(jnp.int32))
+
+
+# ---- hash-table build (shared by the XLA path and the kernel's ops) ------- #
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def build_table(s_keys, table_size: int, probe_depth: int = 4):
+    """Open-addressing table via the paper's sequential build, vectorized:
+    slot = hash(k) + probe offset; bounded linear probing.  Returns
+    (ht_keys, ht_vals) with EMPTY = -1.  Keys must be unique and
+    non-negative; entries that exhaust probe_depth are dropped (counted by
+    the caller — mirrors the paper's capacity limit)."""
+    assert table_size & (table_size - 1) == 0
+    n = s_keys.shape[0]
+    ht_keys = jnp.full((table_size,), -1, jnp.int32)
+    ht_vals = jnp.full((table_size,), -1, jnp.int32)
+    h = _hash(s_keys, table_size)
+    taken = jnp.zeros((table_size,), jnp.bool_)
+    placed = jnp.zeros((n,), jnp.bool_)
+    for depth in range(probe_depth):
+        slot = (h + depth) & (table_size - 1)
+        # first-wins per slot: scatter with mode drop handles collisions
+        want = ~placed
+        # who gets each slot: lowest index wins (scatter-min by index)
+        cand = jnp.where(want, slot, table_size)
+        winner = jnp.full((table_size + 1,), n, jnp.int32).at[cand].min(
+            jnp.arange(n, dtype=jnp.int32))[:table_size]
+        win_ok = (winner < n) & (~taken)
+        slot_of_winner = jnp.where(win_ok, jnp.arange(table_size), -1)
+        got = jnp.zeros((n + 1,), jnp.bool_).at[
+            jnp.where(win_ok, winner, n)].set(True)[:n]
+        ht_keys = jnp.where(win_ok, s_keys[jnp.clip(winner, 0, n - 1)], ht_keys)
+        ht_vals = jnp.where(win_ok, jnp.clip(winner, 0, n - 1), ht_vals)
+        taken = taken | win_ok
+        placed = placed | got
+    return ht_keys, ht_vals, placed
+
+
+def _hash(k, table_size: int):
+    # Knuth multiplicative hashing on int32 (matches the kernel)
+    return (k * jnp.int32(-1640531527)) & jnp.int32(table_size - 1)
+
+
+def probe_ref(ht_keys, ht_vals, l_keys, probe_depth: int = 4):
+    """Vectorized bounded linear probe — the kernel's exact semantics."""
+    ts = ht_keys.shape[0]
+    h = _hash(l_keys, ts)
+    s_idx = jnp.full(l_keys.shape, -1, jnp.int32)
+    for depth in range(probe_depth):
+        slot = (h + depth) & (ts - 1)
+        hit = (ht_keys[slot] == l_keys) & (s_idx < 0)
+        s_idx = jnp.where(hit, ht_vals[slot], s_idx)
+    return s_idx, s_idx >= 0

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for range selection (paper Algorithm 1).
+
+Given a column of int32 and an inclusive [lo, hi] range, produce the indexes
+of matching values and the match count.  The padded variant mirrors the
+paper's dummy-element trick: each PARALLELISM-wide group emits a full lane
+line with -1 dummies so the output is lane-aligned.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def select_indices(x, lo, hi):
+    """Dense oracle: (indices-with--1-at-non-matches, count)."""
+    idx = jnp.arange(x.shape[0], dtype=jnp.int32)
+    mask = (x >= lo) & (x <= hi)
+    count = jnp.sum(mask.astype(jnp.int32))
+    return jnp.where(mask, idx, -1), count
+
+
+def select_compact(x, lo, hi):
+    """Compacted oracle: matching indices first (stable order), then -1 pad."""
+    padded, count = select_indices(x, lo, hi)
+    order = jnp.argsort(padded == -1, stable=True)     # matches first
+    return padded[order], count
+
+
+def select_blocked(x, lo, hi, block: int):
+    """Block-padded oracle matching the kernel layout: per block of size
+    ``block`` emit (block,) indices with -1 dummies and a per-block count."""
+    n = x.shape[0]
+    assert n % block == 0
+    xb = x.reshape(n // block, block)
+    idx = jnp.arange(n, dtype=jnp.int32).reshape(n // block, block)
+    mask = (xb >= lo) & (xb <= hi)
+    counts = jnp.sum(mask.astype(jnp.int32), axis=1)
+    return jnp.where(mask, idx, -1), counts

@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for minibatch SGD on GLMs (paper Algorithm 3).
+
+Loss: ridge regression (J = 1/2 (<x,a> - b)^2) or logistic regression
+(sigmoid link), both with optional L2.  Semantics match the kernel exactly:
+mean gradient over each minibatch, model updated once per minibatch (the
+RAW dependency the paper preserves), dataset scanned in order for N epochs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _link(kind: str, z):
+    return jax.nn.sigmoid(z) if kind == "logreg" else z
+
+
+@partial(jax.jit, static_argnames=("minibatch", "epochs", "kind"))
+def sgd_ref(a, b, x0, *, lr: float, l2: float = 0.0, minibatch: int = 16,
+            epochs: int = 1, kind: str = "ridge"):
+    """a: (m, n) f32; b: (m,); x0: (n,). Returns trained x."""
+    m, n = a.shape
+    assert m % minibatch == 0
+    nb = m // minibatch
+    ab = a.reshape(nb, minibatch, n)
+    bb = b.reshape(nb, minibatch)
+
+    def mb_step(x, inp):
+        ai, bi = inp
+        z = ai @ x                                  # Dot
+        d = _link(kind, z) - bi                     # ScalarEngine
+        g = ai.T @ d / minibatch                    # Update (gradient)
+        x = x - lr * (g + 2.0 * l2 * x)             # model update (RAW kept)
+        return x, None
+
+    def epoch(x, _):
+        x, _ = jax.lax.scan(mb_step, x, (ab, bb))
+        return x, None
+
+    x, _ = jax.lax.scan(epoch, x0, None, length=epochs)
+    return x
+
+
+def loss_ref(a, b, x, *, l2: float = 0.0, kind: str = "ridge"):
+    z = a @ x
+    if kind == "logreg":
+        p = jax.nn.sigmoid(z)
+        eps = 1e-7
+        j = -(b * jnp.log(p + eps) + (1 - b) * jnp.log(1 - p + eps))
+    else:
+        j = 0.5 * jnp.square(z - b)
+    return jnp.mean(j) + l2 * jnp.sum(jnp.square(x))

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel for pipelined minibatch SGD (paper §VI, Fig. 9).
+
+TPU adaptation of the paper's dataflow engine: the model x lives in VMEM
+scratch for the WHOLE run (the paper keeps it in on-chip registers/BRAM);
+the dataset streams HBM->VMEM one minibatch block per sequential grid step
+(Pallas double-buffers the incoming block while the previous one computes —
+the ingress FIFO of Fig. 9).  Dot / ScalarEngine / Update are the three
+fused stages inside the kernel body.  Grid iteration order IS the RAW
+dependency the paper preserves: ``dimension_semantics=("arbitrary",)``
+forbids reordering, so convergence matches the oracle bit-for-bit modulo
+float addition order.
+
+Epochs are folded into the grid (step e*nb + i reads block i), mirroring
+the paper's iterative rescans of the HBM-resident dataset.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU compiler params are a no-op under interpret mode
+    from jax.experimental.pallas import tpu as pltpu
+    _HAS_TPU = True
+except Exception:                                     # pragma: no cover
+    _HAS_TPU = False
+
+
+def _sgd_kernel(a_ref, b_ref, x0_ref, xout_ref, x_vmem, *,
+                lr: float, l2: float, kind: str, nb: int, epochs: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        x_vmem[...] = x0_ref[...]
+
+    a = a_ref[...]                                   # (B, n) minibatch block
+    b = b_ref[...]                                   # (B,)
+    x = x_vmem[...]
+    z = jnp.dot(a, x, preferred_element_type=jnp.float32)        # Dot
+    if kind == "logreg":
+        z = jax.nn.sigmoid(z)                        # ScalarEngine
+    d = z - b
+    g = jnp.dot(d, a, preferred_element_type=jnp.float32) / a.shape[0]
+    x = x - lr * (g + 2.0 * l2 * x)                  # Update (RAW preserved)
+    x_vmem[...] = x
+
+    @pl.when(step == nb * epochs - 1)
+    def _emit():
+        xout_ref[...] = x
+
+
+def sgd_pallas(a, b, x0, *, lr: float, l2: float = 0.0, minibatch: int = 16,
+               epochs: int = 1, kind: str = "ridge",
+               interpret: bool = False):
+    """a: (m, n) f32; b: (m,); x0: (n,). Returns trained x (n,)."""
+    m, n = a.shape
+    assert m % minibatch == 0
+    nb = m // minibatch
+    kernel = functools.partial(_sgd_kernel, lr=lr, l2=l2, kind=kind,
+                               nb=nb, epochs=epochs)
+    kwargs = {}
+    if _HAS_TPU and not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",))      # sequential: RAW dep
+    return pl.pallas_call(
+        kernel,
+        grid=(nb * epochs,),
+        in_specs=[
+            pl.BlockSpec((minibatch, n), lambda i: (i % nb, 0)),
+            pl.BlockSpec((minibatch,), lambda i: (i % nb,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n,), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(a, b, x0)

@@ -1,0 +1,29 @@
+"""Oracle for the SSD (Mamba-2) chunk kernel: the validated pure-jnp chunked
+implementation from the model, plus the naive sequential recurrence."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.mamba import ssd_chunked  # noqa: F401  (the oracle)
+
+
+def ssd_naive(x, dt, a_log, b, c, d_skip):
+    """Sequential recurrence in numpy — ground truth for tests."""
+    x, dt, b, c = map(np.asarray, (x, dt, b, c))
+    a_log, d_skip = np.asarray(a_log), np.asarray(d_skip)
+    B, S, NH, HD = x.shape
+    NG, DS = b.shape[-2], b.shape[-1]
+    rep = NH // NG
+    h = np.zeros((B, NH, HD, DS), np.float32)
+    A = -np.exp(a_log)
+    ys = []
+    for t in range(S):
+        da = np.exp(A[None, :] * dt[:, t])
+        bt = np.repeat(b[:, t], rep, axis=1)
+        ct = np.repeat(c[:, t], rep, axis=1)
+        upd = (dt[:, t][..., None] * x[:, t])[..., None] * bt[:, :, None, :]
+        h = h * da[:, :, None, None] + upd
+        y = np.einsum("bhds,bhs->bhd", h, ct) + d_skip[None, :, None] * x[:, t]
+        ys.append(y)
+    return np.stack(ys, 1), h

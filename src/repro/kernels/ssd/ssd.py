@@ -1,0 +1,105 @@
+"""Pallas TPU kernel for the SSD (Mamba-2) chunk scan.
+
+Grid: (batch*heads, n_chunks) with chunks innermost and SEQUENTIAL — the
+inter-chunk state h (hd x ds, f32) lives in VMEM scratch across grid steps,
+exactly like the SGD kernel keeps its model on-chip (the paper's design
+discipline: persistent small state in fast memory, large operands streamed).
+Each step computes the intra-chunk quadratic term plus the contribution of
+the carried state, then advances the state — fusing what the XLA path does
+in five separate einsums with materialized (B,NC,nh,Q,Q) intermediates.
+
+Layout: per (batch*head) the kernel receives x (Q, hd), dt (Q,), b/c
+(Q, ds) blocks; Q=chunk defaults to 128 (lane-aligned; Q x Q fits VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, dsk_ref, y_ref, hout_ref,
+                h_s, *, nc: int, chunk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_s[...] = jnp.zeros_like(h_s)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, hd)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q,)
+    bb = b_ref[0].astype(jnp.float32)         # (Q, ds)
+    cc = c_ref[0].astype(jnp.float32)         # (Q, ds)
+    a_log = a_ref[0]                          # scalar: this head's A_log
+    d_skip = dsk_ref[0]
+
+    a = -jnp.exp(a_log) * dt                  # (Q,) log-decay
+    cum = jnp.cumsum(a)                       # (Q,)
+    xdt = x * dt[:, None]
+
+    # intra-chunk: scores_ij = c_i . b_j * exp(cum_i - cum_j), i >= j
+    seg = cum[:, None] - cum[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    l = jnp.where(iota_i >= iota_j, jnp.exp(seg), 0.0)
+    scores = jnp.dot(cc, bb.T, preferred_element_type=jnp.float32) * l
+    y = jnp.dot(scores, xdt, preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_i += exp(cum_i) * c_i . h_prev
+    h = h_s[...]                              # (hd, ds)
+    y = y + jnp.exp(cum)[:, None] * jnp.dot(
+        cc, h.T, preferred_element_type=jnp.float32)
+    y = y + d_skip * x
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # advance state: h = h * exp(sum a) + sum_j exp(cum_last - cum_j) xdt_j b_j
+    decay_to_end = jnp.exp(cum[-1] - cum)     # (Q,)
+    upd = jnp.dot((xdt * decay_to_end[:, None]).T, bb,
+                  preferred_element_type=jnp.float32)      # (hd, ds)
+    h_s[...] = h * jnp.exp(cum[-1]) + upd
+
+    @pl.when(j == nc - 1)
+    def _emit():
+        hout_ref[0] = h_s[...]
+
+
+def ssd_pallas(x, dt, a_log, b, c, d_skip, *, chunk: int = 128,
+               interpret: bool = False):
+    """x (BH, S, hd); dt (BH, S); a_log (BH,); b/c (BH, S, ds); d_skip (BH,).
+    Returns (y (BH, S, hd), h_final (BH, hd, ds))."""
+    bh, s, hd = x.shape
+    ds = b.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    kernel = functools.partial(_ssd_kernel, nc=nc, chunk=chunk)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, chunk, ds), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, hd, ds), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, hd), x.dtype),
+            jax.ShapeDtypeStruct((bh, hd, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")) if not interpret
+        else None,
+        interpret=interpret,
+    )(x, dt, a_log, b, c, d_skip)
+    return y, hout

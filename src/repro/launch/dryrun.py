@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is the multi-pod dry-run driver:
+# for every (architecture x input shape) cell it lowers + compiles the real
+# step function against ShapeDtypeStruct stand-ins on the production mesh,
+# records memory_analysis / cost_analysis / collective traffic, and appends
+# to a resumable JSON so EXPERIMENTS.md §Dry-run and §Roofline read from it.
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.analysis.hlo import collective_stats, op_histogram
+from repro.analysis.roofline import from_measurements
+from repro.configs.base import SHAPES, all_archs, dryrun_cells, get_arch
+from repro.distributed.sharding import resolve
+from repro.launch.mesh import make_production_mesh
+from repro.train.train_loop import step_and_specs
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "dryrun_results.json"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             context_parallel_decode: bool = False, save_hist: bool = True,
+             overrides: dict | None = None) -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+
+    reason = cfg.skip_reason(shape)
+    if reason:
+        cell.update(status="skipped", reason=reason)
+        return cell
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    cp = context_parallel_decode or (
+        shape.name == "long_500k" and cfg.family == "hybrid")
+    rules = resolve(cfg, mesh, shape, context_parallel_decode=cp)
+    fn, args = step_and_specs(cfg, shape, rules, **(overrides or {}))
+
+    donate = (0, 1) if shape.kind == "train" else \
+        ((2,) if shape.kind == "decode" else ())
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        txt = compiled.as_text()
+        coll = collective_stats(txt)
+        flops = float(ca.get("flops", 0.0))
+        byts = float(ca.get("bytes accessed", 0.0))
+        coll_op = coll.total_operand_bytes
+        coll_wire = coll.total_wire_bytes
+
+        # Stitched counting: a rolled scan's while body is counted once by
+        # cost_analysis, so compile each repeated unit standalone and add
+        # (trip_count - 1) x its counts.
+        from repro.models.registry import bundle as _bundle
+        units_meta = []
+        cu_kw = {}
+        if shape.kind == "train" and (overrides or {}).get("remat_policy"):
+            cu_kw["remat_policy"] = overrides["remat_policy"]
+        try:
+            units = _bundle(cfg).count_units(shape, rules, **cu_kw)
+        except TypeError:
+            units = _bundle(cfg).count_units(shape, rules)
+        for name, ufn, uargs, mult in units:
+            uc = jax.jit(ufn).lower(*uargs).compile()
+            uca = uc.cost_analysis() or {}
+            ucoll = collective_stats(uc.as_text())
+            uf = float(uca.get("flops", 0.0))
+            ub = float(uca.get("bytes accessed", 0.0))
+            flops += mult * uf
+            byts += mult * ub
+            coll_op += mult * ucoll.total_operand_bytes
+            coll_wire += mult * ucoll.total_wire_bytes
+            units_meta.append({"name": name, "mult": mult, "flops": uf,
+                               "bytes": ub,
+                               "coll_operand": ucoll.total_operand_bytes})
+
+    rl = from_measurements(
+        cfg, shape, mesh_name, chips,
+        flops_per_dev=flops,
+        bytes_per_dev=byts,
+        coll_operand=coll_op,
+        coll_wire=coll_wire)
+
+    cell.update(
+        status="ok",
+        chips=chips,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        flops_per_dev=flops,
+        bytes_per_dev=byts,
+        count_units=units_meta,
+        collectives={k: int(v) for k, v in coll.counts.items()},
+        coll_operand_bytes=coll_op,
+        coll_operand_by_kind={k: float(v) for k, v in coll.operand_bytes.items()},
+        coll_wire_bytes=coll_wire,
+        memory=dict(
+            argument_bytes=getattr(ma, "argument_size_in_bytes", None),
+            output_bytes=getattr(ma, "output_size_in_bytes", None),
+            temp_bytes=getattr(ma, "temp_size_in_bytes", None),
+            alias_bytes=getattr(ma, "alias_size_in_bytes", None),
+        ),
+        roofline=rl.to_dict(),
+    )
+    if save_hist:
+        cell["op_histogram"] = op_histogram(txt, top=20)
+    return cell
+
+
+def load_results() -> dict:
+    if RESULTS.exists():
+        return json.loads(RESULTS.read_text())
+    return {}
+
+
+def save_results(res: dict) -> None:
+    RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    RESULTS.write_text(json.dumps(res, indent=1, sort_keys=True))
+
+
+def cell_key(arch: str, shape: str, mesh: str) -> str:
+    return f"{arch}|{shape}|{mesh}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) on the chosen mesh")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        todo = [(c.name, s.name) for c, s, _ in dryrun_cells()]
+    else:
+        archs = [args.arch] if args.arch else sorted(all_archs())
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        todo = [(a, s) for a in archs for s in shapes]
+
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    res = load_results()
+    for arch, shape in todo:
+        key = cell_key(arch, shape, mesh_name)
+        if not args.force and key in res and res[key].get("status") in ("ok", "skipped"):
+            print(f"[skip-cached] {key}")
+            continue
+        print(f"[dryrun] {key} ...", flush=True)
+        try:
+            cell = run_cell(arch, shape, args.multi_pod)
+        except Exception as e:                      # noqa: BLE001
+            cell = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                    "status": "error", "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-2000:]}
+        res[key] = cell
+        save_results(res)
+        st = cell.get("status")
+        if st == "ok":
+            rl = cell["roofline"]
+            print(f"  ok: compile={cell['compile_s']}s "
+                  f"t_comp={rl['t_compute']:.4f}s t_mem={rl['t_memory']:.4f}s "
+                  f"t_coll={rl['t_collective']:.4f}s bound={rl['bottleneck']} "
+                  f"mfu_bound={rl['mfu_bound']:.3f}", flush=True)
+        else:
+            print(f"  {st}: {cell.get('reason') or cell.get('error')}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Serving launcher: batched prefill + greedy decode loop.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+        --prompt-len 24 --gen-len 12 --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeConfig, get_arch, smoke_config
+from repro.distributed.sharding import resolve
+from repro.launch.mesh import make_host_mesh
+from repro.models import registry
+from repro.train.train_loop import make_decode_step, make_prefill_step
+
+
+def serve(arch: str, *, smoke: bool = True, prompt_len: int = 24,
+          gen_len: int = 12, batch: int = 4, seed: int = 0):
+    cfg = get_arch(arch)
+    if smoke:
+        cfg = smoke_config(cfg)
+    mesh = make_host_mesh()
+    max_len = prompt_len + gen_len
+    shape = ShapeConfig("serve", max_len, batch, "prefill")
+    rules = resolve(cfg, mesh, shape)
+    mb = registry.bundle(cfg)
+
+    with jax.set_mesh(mesh):
+        params = mb.materialize_params(jax.random.key(seed), tp=1)
+        prompts = jax.random.randint(jax.random.key(seed + 1),
+                                     (batch, prompt_len), 0,
+                                     cfg.vocab_size, jnp.int32)
+        caches = registry.make_cache(cfg, shape, rules)
+        prefill = jax.jit(make_prefill_step(mb, rules))
+        decode = jax.jit(make_decode_step(mb, rules), donate_argnums=(2,))
+
+        extras = {}
+        if cfg.is_enc_dec:
+            extras["frames"] = 0.02 * jax.random.normal(
+                jax.random.key(7), (batch, max_len, cfg.d_model),
+                jnp.float32).astype(jnp.bfloat16)
+        t0 = time.perf_counter()
+        logits, caches = prefill(params, {"tokens": prompts, **extras},
+                                 caches)
+        tok = jnp.argmax(logits[..., :cfg.vocab_size],
+                         axis=-1).astype(jnp.int32)
+        out = [tok]
+        for i in range(gen_len - 1):
+            pos = jnp.asarray(prompt_len + i, jnp.int32)
+            tok, logits, caches = decode(params,
+                                         {"tokens": tok, "pos": pos}, caches)
+            out.append(tok)
+        gen = jnp.concatenate(out, axis=1)
+        jax.block_until_ready(gen)
+        dt = time.perf_counter() - t0
+        print(f"[serve] {arch}: {batch}x{prompt_len} prompt -> "
+              f"{batch}x{gen_len} tokens in {dt:.2f}s "
+              f"({batch * gen_len / dt:.1f} tok/s incl. compile)")
+        return gen
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen-len", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    args = ap.parse_args()
+    serve(args.arch, smoke=args.smoke, prompt_len=args.prompt_len,
+          gen_len=args.gen_len, batch=args.batch)
+
+
+if __name__ == "__main__":
+    main()

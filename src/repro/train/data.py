@@ -1,0 +1,76 @@
+"""Deterministic, resumable data pipeline (the datamover, paper §III).
+
+Synthetic-token and columnar-backed sources share one contract: batches are
+a pure function of (seed, step) — so restart-from-checkpoint replays the
+exact stream with no persisted iterator state, and any host can produce any
+shard (elastic-friendly).  Double buffering mirrors the paper's dedicated
+datamovers: the next batch is staged while the step runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+
+def synthetic_batch(cfg: DataConfig, step: int) -> dict:
+    """Markov-ish synthetic LM tokens: deterministic in (seed, step)."""
+    rng = np.random.default_rng((cfg.seed << 20) ^ step)
+    base = rng.integers(0, cfg.vocab_size,
+                        size=(cfg.global_batch, cfg.seq_len + 1),
+                        dtype=np.int32)
+    # make it learnable: every odd position repeats its predecessor, so a
+    # model that learns the copy rule halves the uniform CE floor
+    base[:, 1::2] = base[:, 0:-1:2]
+    return {"tokens": jnp.asarray(base[:, :-1]),
+            "targets": jnp.asarray(base[:, 1:])}
+
+
+class Pipeline:
+    """Double-buffered, sharded batch stream."""
+
+    def __init__(self, cfg: DataConfig, sharding=None, start_step: int = 0,
+                 extras_fn=None):
+        self.cfg = cfg
+        self.sharding = sharding
+        self.step = start_step
+        self.extras_fn = extras_fn
+        self._staged: Optional[dict] = None
+
+    def _produce(self, step: int) -> dict:
+        batch = synthetic_batch(self.cfg, step)
+        if self.extras_fn is not None:
+            batch.update(self.extras_fn(self.cfg, step))
+        if self.sharding is not None:
+            batch = {k: jax.device_put(v, self.sharding.get(k))
+                     if self.sharding.get(k) is not None else v
+                     for k, v in batch.items()}
+        return batch
+
+    def next(self) -> dict:
+        batch = self._staged if self._staged is not None \
+            else self._produce(self.step)
+        self._staged = None
+        self.step += 1
+        # stage the next batch (the datamover working ahead)
+        self._staged = self._produce(self.step)
+        return batch
+
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    @staticmethod
+    def resume(cfg: DataConfig, state: dict, **kw) -> "Pipeline":
+        assert state["seed"] == cfg.seed, "seed mismatch on resume"
+        return Pipeline(cfg, start_step=int(state["step"]), **kw)

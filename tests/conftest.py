@@ -1,0 +1,13 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def host_mesh():
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh()
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

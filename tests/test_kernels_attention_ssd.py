@@ -1,0 +1,67 @@
+"""Flash-attention + SSD kernels vs oracles (shape sweeps, interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import attend
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_naive
+
+
+@pytest.mark.parametrize("s,bq,bk", [(128, 64, 64), (256, 128, 128),
+                                     (256, 64, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("d", [32, 64])
+def test_flash_matches_dense(rng, s, bq, bk, causal, d):
+    q = jnp.asarray(rng.normal(size=(2, s, 2, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, s, 2, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, s, 2, d)), jnp.float32)
+    o_ref = attend(q, k, v, causal=causal, impl="xla")
+    o_pal = attend(q, k, v, causal=causal, impl="pallas", interpret=True,
+                   block_q=bq, block_kv=bk)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pal),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16(rng):
+    q = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.bfloat16)
+    o_ref = attend(q, k, v, impl="xla")
+    o_pal = attend(q, k, v, impl="pallas", interpret=True, block_q=64,
+                   block_kv=64)
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_pal, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("s,chunk", [(128, 64), (256, 128), (512, 128)])
+@pytest.mark.parametrize("nh,hd,ds", [(4, 16, 16), (2, 32, 32)])
+def test_ssd_pallas_vs_naive(rng, s, chunk, nh, hd, ds):
+    B, NG = 2, 1
+    x = jnp.asarray(rng.normal(size=(B, s, nh, hd)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, s, nh)), jnp.float32)
+    a_log = jnp.asarray(rng.normal(size=(nh,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, s, NG, ds)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(B, s, NG, ds)), jnp.float32)
+    d_skip = jnp.asarray(rng.normal(size=(nh,)), jnp.float32)
+    y_n, h_n = ssd_naive(x, dt, a_log, b, c, d_skip)
+    y_p, h_p = ssd(x, dt, a_log, b, c, d_skip, chunk=chunk, impl="pallas",
+                   interpret=True)
+    np.testing.assert_allclose(np.asarray(y_p), y_n, rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(h_p), h_n, rtol=2e-2, atol=2e-2)
+
+
+def test_ssd_xla_oracle_matches_naive(rng):
+    """The model's (bf16) chunked path tracks the f32 recurrence."""
+    B, S, NH, HD, NG, DS = 2, 256, 4, 16, 1, 16
+    x = jnp.asarray(rng.normal(size=(B, S, NH, HD)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, S, NH)), jnp.float32)
+    a_log = jnp.asarray(rng.normal(size=(NH,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, S, NG, DS)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(B, S, NG, DS)), jnp.float32)
+    d_skip = jnp.asarray(rng.normal(size=(NH,)), jnp.float32)
+    y_n, h_n = ssd_naive(x, dt, a_log, b, c, d_skip)
+    y, h = ssd(x, dt, a_log, b, c, d_skip, chunk=128, impl="xla")
+    np.testing.assert_allclose(np.asarray(y), y_n, rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(h), h_n, rtol=2e-2, atol=2e-2)

@@ -1,0 +1,46 @@
+"""Selection kernel: shape/dtype sweep vs the pure-jnp oracle + properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.selection import ref
+from repro.kernels.selection.ops import compact, select
+from repro.kernels.selection.selection import select_pallas
+
+
+@pytest.mark.parametrize("n,block", [(2048, 256), (4096, 512), (8192, 1024),
+                                     (8192, 8192)])
+@pytest.mark.parametrize("dtype", [jnp.int32])
+def test_pallas_matches_ref_sweep(rng, n, block, dtype):
+    x = jnp.asarray(rng.integers(-1000, 1000, size=n), dtype)
+    idx_p, cnt_p = select_pallas(x, -100, 250, block=block, interpret=True)
+    idx_r, cnt_r = ref.select_blocked(x, -100, 250, block)
+    np.testing.assert_array_equal(np.asarray(idx_p),
+                                  np.asarray(idx_r).reshape(-1))
+    np.testing.assert_array_equal(np.asarray(cnt_p), np.asarray(cnt_r))
+
+
+@settings(max_examples=25, deadline=None)
+@given(lo=st.integers(-500, 500), width=st.integers(0, 500),
+       seed=st.integers(0, 2**16))
+def test_selection_equals_numpy_oracle(lo, width, seed):
+    r = np.random.default_rng(seed)
+    x = r.integers(-1000, 1000, size=1024).astype(np.int32)
+    hi = lo + width
+    idx, counts = select(jnp.asarray(x), lo, hi, block=256)
+    comp, total = compact(idx, counts)
+    expected = np.nonzero((x >= lo) & (x <= hi))[0]
+    assert int(total) == len(expected)
+    np.testing.assert_array_equal(np.asarray(comp)[:len(expected)], expected)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_selectivity_monotone(seed):
+    """Property: widening the range never decreases the match count."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.integers(0, 1000, size=2048), jnp.int32)
+    counts = [int(select(x, 0, hi, block=256)[1].sum())
+              for hi in (10, 100, 500, 999)]
+    assert counts == sorted(counts)

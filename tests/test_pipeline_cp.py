@@ -1,0 +1,50 @@
+"""Pipeline parallelism + context-parallel decode (single-device mesh:
+ring of size 1 degenerates correctly; multi-stage semantics tested via the
+schedule math and a 1-stage equivalence)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.context_parallel import (
+    cp_decode_attention, cp_decode_reference,
+)
+from repro.distributed.pipeline import bubble_fraction, pipeline_apply
+from repro.launch.mesh import make_host_mesh
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(1, 4) == 0.75
+    assert bubble_fraction(32, 4) < 0.09
+    assert bubble_fraction(8, 1) == 0.0
+
+
+def test_pipeline_identity_on_host_mesh(rng):
+    mesh = make_host_mesh()
+    n_stages = mesh.shape["model"]
+    w = jnp.asarray(rng.normal(size=(n_stages, 8, 8)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+
+    def stage(p, xb):
+        return jnp.tanh(xb @ p)
+
+    with jax.set_mesh(mesh):
+        y = pipeline_apply(mesh, "model", stage, w, x, n_micro=2)
+    # oracle: apply stages sequentially
+    y_ref = x
+    for i in range(n_stages):
+        y_ref = jnp.tanh(y_ref @ w[i])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5)
+
+
+def test_cp_decode_matches_reference(rng):
+    mesh = make_host_mesh()
+    B, S, H, D = 2, 64, 4, 16
+    q = jnp.asarray(rng.normal(size=(B, H, 1, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    valid = jnp.asarray(rng.uniform(size=(B, S)) > 0.3)
+    with jax.set_mesh(mesh):
+        out = cp_decode_attention(mesh, "model", q, k, v, valid)
+    ref = cp_decode_reference(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
