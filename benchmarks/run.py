@@ -1,19 +1,48 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV and
+# writes machine-readable BENCH_paper_figures.json.
+#
+#   PYTHONPATH=src python benchmarks/run.py [--smoke] [--only substr]
+import json
+import os
 import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main() -> None:
-    sys.path.insert(0, "src")
+    # robust to invocation from any cwd (python benchmarks/run.py / -m)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    sys.path.insert(0, _ROOT)
     from benchmarks.paper_figures import ALL
+    smoke = "--smoke" in sys.argv
+    only = None
+    if "--only" in sys.argv:
+        only = sys.argv[sys.argv.index("--only") + 1]
+
+    fns = ALL
+    if smoke:
+        fns = [fn for fn in ALL if fn.__name__ in
+               ("fig2_bandwidth", "tab3_roofline")]
+    if only:
+        fns = [fn for fn in fns if only in fn.__name__]
+
+    results = []
     print("name,us_per_call,derived")
-    for fn in ALL:
+    for fn in fns:
         try:
             rows = fn()
         except Exception as e:                    # noqa: BLE001
             print(f"{fn.__name__},0,ERROR:{type(e).__name__}:{e}")
+            results.append({"name": fn.__name__, "error":
+                            f"{type(e).__name__}: {e}"})
             continue
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
+            results.append({"name": name, "us_per_call": round(us, 1),
+                            "derived": derived})
+
+    with open(os.path.join(_ROOT, "BENCH_paper_figures.json"), "w") as f:
+        json.dump({"smoke": smoke, "rows": results}, f, indent=2)
 
 
 if __name__ == '__main__':

@@ -1,6 +1,8 @@
-"""In-database analytics (the MonetDB integration, paper §II/III):
-a TPC-H-flavoured select -> join -> aggregate plan plus in-database ML,
-all through the columnar engine's UDF surface.
+"""In-database analytics (the MonetDB integration, paper §II/III) — now
+declarative: the TPC-H-flavoured select -> join -> aggregate plan plus
+in-database ML go through the query subsystem (logical plan -> optimizer ->
+bandwidth-aware cost model -> executor), which chooses placement and impl
+per operator; the hand-written engine sequence stays as the cross-check.
 
     PYTHONPATH=src python examples/analytics_pipeline.py
 """
@@ -8,46 +10,77 @@ import numpy as np
 
 from repro.columnar import engine, udf
 from repro.columnar.table import Table
-from repro.core.channels import plan
 from repro.core.sgd_glm import HyperParams
-from repro.launch.mesh import make_host_mesh
+from repro.query import Q, Catalog, Executor, QueryServer
 
 rng = np.random.default_rng(1)
-mesh = make_host_mesh()
-p = plan(mesh, "model")
 
 n = 1 << 16
 lineitem = Table.from_arrays("lineitem", {
     "orderkey": rng.integers(0, 20_000, size=n).astype(np.int32),
     "quantity": rng.integers(1, 50, size=n).astype(np.int32),
     "price": rng.integers(100, 10_000, size=n).astype(np.int32),
-}).place(p)
+})
 orders = Table.from_arrays("orders", {
     "orderkey": np.arange(0, 40_000, 2, dtype=np.int32),   # even keys exist
 })
-
-# SELECT sum(price) FROM lineitem JOIN orders USING (orderkey)
-#  WHERE quantity BETWEEN 30 AND 49
-sel = udf.call("select_range", lineitem, "quantity", 30, 49)
-filtered = engine.gather(lineitem, sel.column("idx"),
-                         ["orderkey", "price"], name="filtered")
-filtered = filtered.place(p)
-j = udf.call("join", filtered, orders, "orderkey")
-proj = engine.gather(filtered, j.column("l_idx"), ["price"])
-total = udf.call("aggregate_sum", proj, "price")
-print(f"query: {sel.num_rows} rows pass the filter, {j.num_rows} join, "
-      f"sum(price) = {total:.0f}")
-
-# in-database ML (doppioDB-style UDF): predict high-price rows
 features = Table.from_arrays("feat", {
     "f0": rng.uniform(-1, 1, size=2048).astype(np.float32),
     "f1": rng.uniform(-1, 1, size=2048).astype(np.float32),
     "f2": rng.uniform(-1, 1, size=2048).astype(np.float32),
     "y": (rng.uniform(size=2048) > 0.5).astype(np.float32),
 })
-xs, losses = udf.call("train_glm", features, ["f0", "f1", "f2"], "y",
-                      [HyperParams(0.1, 0.0), HyperParams(0.3, 1e-3)],
-                      p, epochs=5)
-print(f"train_glm UDF: {len(losses)} models, losses = "
+
+# tables go in UNPLACED: the cost model owns placement now
+catalog = Catalog.from_tables(lineitem, orders, features)
+ex = Executor(catalog)
+
+# SELECT sum(price) FROM lineitem JOIN orders USING (orderkey)
+#  WHERE quantity BETWEEN 30 AND 49
+q = (Q.scan("lineitem")
+      .join(Q.scan("orders"), on="orderkey")
+      .filter("quantity", 30, 49)
+      .sum("price"))
+print("physical plan (optimizer decisions):")
+print(ex.explain(q))
+res = ex.execute(q)
+print(f"\nsum(price) = {res.value} "
+      f"(cache_hit={res.cache_hit}, {res.wall_s * 1e3:.1f}ms)")
+
+# the hand-written sequence the DSL replaces — must agree exactly
+p = ex.plans["partitioned"]
+placed = lineitem.place(p)
+sel = udf.call("select_range", placed, "quantity", 30, 49)
+filtered = engine.gather(placed, sel.column("idx"), ["orderkey", "price"],
+                         name="filtered").place(p)
+j = udf.call("join", filtered, orders, "orderkey")
+proj = engine.gather(filtered, j.column("l_idx"), ["price"])
+total = udf.call("aggregate_sum", proj, "price")
+assert int(total) == int(res.value), (total, res.value)
+print(f"hand-written engine sequence agrees: sum(price) = {total:.0f}")
+
+# the whole query as a registered UDF (the paper's DBMS surface)
+total_udf = udf.call("sql_like_query", ex, q)
+assert int(total_udf) == int(res.value)
+
+# in-database ML (doppioDB-style), declaratively
+glm = (Q.scan("feat")
+        .train_glm(["f0", "f1", "f2"], "y",
+                   [HyperParams(0.1, 0.0), HyperParams(0.3, 1e-3)],
+                   epochs=5))
+xs, losses = ex.execute(glm).value
+print(f"train_glm node: {len(losses)} models, losses = "
       f"{[round(float(l), 4) for l in losses]}")
+
+# serving: many clients, deduped + micro-batched
+srv = QueryServer(ex)
+for lo in (1, 5, 9, 13, 1, 5):
+    srv.submit(Q.scan("lineitem").filter("quantity", lo, lo + 9)
+                .sum("price"))
+srv.drain()
+s = srv.stats()
+print(f"served {s['n_queries']} queries: {s['n_deduped']} deduped, "
+      f"{s['n_microbatched']} micro-batched, "
+      f"plan-cache hit rate {s['plan_cache_hit_rate']:.2f}, "
+      f"{s['queries_per_s']:.0f} q/s")
 print(f"registered UDFs: {udf.registered()}")

@@ -7,6 +7,7 @@ like MonetDB's optimizer picks the UDF implementation.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -17,6 +18,16 @@ from repro.core import join as join_core
 from repro.core import selection as sel_core
 from repro.core import sgd_glm
 from repro.core.channels import ChannelPlan
+
+
+def compact_positions(valid: jax.Array, n: int) -> jax.Array:
+    """Positions of the first ``n`` True entries, ascending.
+
+    Shared compaction for selection and join outputs: O(N) nonzero with a
+    static output size instead of the old O(N log N) full argsort over all
+    lanes."""
+    (pos,) = jnp.nonzero(valid, size=n, fill_value=0)
+    return pos.astype(jnp.int32)
 
 
 def scan(table: Table, columns: Sequence[str]) -> Table:
@@ -31,9 +42,8 @@ def select_range(table: Table, column: str, lo: int, hi: int, *,
     idx, counts = sel_core.select_distributed(
         table.column(column), lo, hi, table.plan, block=block, impl=impl)
     flat = idx.reshape(-1)
-    order = jnp.argsort(flat == -1, stable=True)
     n = int(jnp.sum(counts))
-    compacted = flat[order][:n]
+    compacted = flat[compact_positions(flat >= 0, n)]
     return Table(f"{table.name}.sel", {"idx": Column(compacted, "idx")})
 
 
@@ -41,13 +51,19 @@ def join(left: Table, right: Table, on: str, *, impl: str = "xla") -> Table:
     """Inner join: right is the small (build) side.  Returns matched index
     pairs (l_idx, r_idx) — MonetDB's join produces exactly such BAT pairs."""
     assert left.plan is not None
+    n_build = right.num_rows
+    if n_build > join_core.HT_CAPACITY:
+        passes = -(-n_build // join_core.HT_CAPACITY)
+        warnings.warn(
+            f"join build side '{right.name}' has {n_build} rows > "
+            f"HT_CAPACITY={join_core.HT_CAPACITY}: multi-pass join will "
+            f"rescan the probe side {passes}x (Fig. 8b linear regime)",
+            RuntimeWarning, stacklevel=2)
     s_idx, total = join_core.join_distributed(
         right.column(on), left.column(on), left.plan, impl=impl)
-    hit = s_idx >= 0
-    order = jnp.argsort(~hit, stable=True)
     n = int(total)
-    l_idx = jnp.arange(left.num_rows, dtype=jnp.int32)[order][:n]
-    r_idx = s_idx[order][:n]
+    l_idx = compact_positions(s_idx >= 0, n)
+    r_idx = s_idx[l_idx]
     return Table("join", {"l_idx": Column(l_idx, "l_idx"),
                           "r_idx": Column(r_idx, "r_idx")})
 

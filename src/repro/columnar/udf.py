@@ -32,3 +32,8 @@ register("select_range")(engine.select_range)
 register("join")(engine.join)
 register("train_glm")(engine.train_glm)
 register("aggregate_sum")(engine.aggregate_sum)
+
+# declarative whole-query UDF: a logical plan through optimize->cost->exec
+from repro.query.exec import sql_like_query          # noqa: E402
+
+register("sql_like_query")(sql_like_query)

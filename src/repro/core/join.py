@@ -10,6 +10,8 @@ per S block), reproducing the linear regime of Fig. 8b.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -24,7 +26,7 @@ HT_CAPACITY = 8192            # tuples per pass — the paper's URAM budget
 
 
 def join_distributed(s_keys, l_keys, plan: ChannelPlan, *,
-                     table_size: int = 2 * HT_CAPACITY,
+                     table_size: int = 4 * HT_CAPACITY,
                      probe_depth: int = 8, block: int = DEFAULT_BLOCK,
                      impl: str = "xla", interpret: bool = True):
     """s_keys (N_S,) replicated; l_keys (N_L,) partitioned per plan.
@@ -38,24 +40,40 @@ def join_distributed(s_keys, l_keys, plan: ChannelPlan, *,
     n_passes = -(-n_s // HT_CAPACITY)
     pad_s = n_passes * HT_CAPACITY - n_s
     if pad_s:
-        s_keys = jnp.concatenate(
-            [s_keys, jnp.full((pad_s,), -(2 ** 30), jnp.int32)])
+        # distinct negative sentinels: build_table needs unique keys, and a
+        # block of identical pads would flood the bounded build's drop buffer
+        # and silently evict genuinely dropped keys (missed matches)
+        pads = -(2 ** 30) - jnp.arange(pad_s, dtype=jnp.int32)
+        s_keys = jnp.concatenate([s_keys, pads])
 
     def engine(l_local):
         s_idx = jnp.full(l_local.shape, -1, jnp.int32)
+        dropped_max = jnp.zeros((), jnp.int32)
         for p in range(n_passes):                     # rescan L per S block
             s_blk = jax.lax.dynamic_slice_in_dim(
                 s_keys, p * HT_CAPACITY, HT_CAPACITY)
-            idx_p, _, _ = join_ops.hash_join(
+            idx_p, _, dropped = join_ops.hash_join(
                 s_blk, l_local, table_size=table_size,
                 probe_depth=probe_depth, block=block, impl=impl,
                 interpret=interpret)
             s_idx = jnp.where((s_idx < 0) & (idx_p >= 0),
                               idx_p + p * HT_CAPACITY, s_idx)
+            dropped_max = jnp.maximum(dropped_max, dropped.astype(jnp.int32))
         count = jnp.sum((s_idx >= 0).astype(jnp.int32))
-        return s_idx, count[None]
+        return s_idx, count[None], dropped_max[None]
 
     fn = shard_map(engine, mesh=mesh, in_specs=(P(axis),),
-                   out_specs=(P(axis), P(axis)), check_rep=False)
-    s_idx, counts = fn(l_keys)
+                   out_specs=(P(axis), P(axis), P(axis)), check_rep=False)
+    s_idx, counts, dropped = fn(l_keys)
+    if not isinstance(dropped, jax.core.Tracer):
+        # eager callers get the exactness bound surfaced; under jit the
+        # check is skipped (no host sync inside a trace)
+        worst = int(jnp.max(dropped))
+        if worst > join_ops.MAX_DROPPED:
+            warnings.warn(
+                f"hash-join build dropped {worst} keys in one pass, more "
+                f"than the MAX_DROPPED={join_ops.MAX_DROPPED} slow-path "
+                "buffer: overflowing keys match nothing (undercount). "
+                "Increase table_size or probe_depth.", RuntimeWarning,
+                stacklevel=2)
     return s_idx, jnp.sum(counts)

@@ -10,7 +10,7 @@ from repro.kernels.join import ref
 from repro.kernels.join.join import DEFAULT_BLOCK, probe_pallas
 
 
-MAX_DROPPED = 64      # slow-path buffer for keys the bounded build dropped
+MAX_DROPPED = 256     # slow-path buffer for keys the bounded build dropped
 
 
 @partial(jax.jit, static_argnames=("table_size", "probe_depth", "block",
@@ -38,13 +38,15 @@ def hash_join(s_keys, l_keys, *, table_size: int, probe_depth: int = 4,
     # slow path: gather (up to MAX_DROPPED) unplaced keys, compare directly
     n_s = s_keys.shape[0]
     drop_rank = jnp.cumsum((~placed).astype(jnp.int32)) - 1
-    slot = jnp.where(~placed, jnp.minimum(drop_rank, MAX_DROPPED - 1),
+    # overflow beyond MAX_DROPPED goes to the trash slot (sliced off) rather
+    # than overwriting the last real buffer entry
+    slot = jnp.where(~placed & (drop_rank < MAX_DROPPED), drop_rank,
                      MAX_DROPPED)
     drop_keys = jnp.full((MAX_DROPPED + 1,), -(2 ** 30), jnp.int32) \
         .at[slot].set(s_keys)[:MAX_DROPPED]
     drop_vals = jnp.full((MAX_DROPPED + 1,), -1, jnp.int32) \
         .at[slot].set(jnp.arange(n_s, dtype=jnp.int32))[:MAX_DROPPED]
-    eq = l_keys[:, None] == drop_keys[None, :]              # (N_L, 64)
+    eq = l_keys[:, None] == drop_keys[None, :]          # (N_L, MAX_DROPPED)
     any_hit = jnp.any(eq, axis=1)
     which = jnp.argmax(eq, axis=1)
     s_idx = jnp.where((s_idx < 0) & any_hit, drop_vals[which], s_idx)

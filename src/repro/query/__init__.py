@@ -1,0 +1,28 @@
+"""Query subsystem: logical plans -> optimizer -> bandwidth-aware cost
+model -> physical executor -> batched serving (the MonetDB integration
+layer of the paper, grown into a subsystem).
+
+    from repro.query import Q, Catalog, Executor, QueryServer
+
+    cat = Catalog.from_tables(lineitem, orders)
+    ex = Executor(cat)
+    q = (Q.scan("lineitem").filter("quantity", 30, 49)
+          .join(Q.scan("orders"), on="orderkey").sum("price"))
+    total = ex.execute(q).value
+"""
+from repro.query.logical import (                                # noqa: F401
+    Aggregate, Filter, FilterProject, Join, Node, Project, Q, Scan,
+    TrainGLM, literals, output_columns, pformat, signature, walk,
+)
+from repro.query.cost import (                                   # noqa: F401
+    ColumnStats, CostModel, PhysNode, TableStats, column_placements,
+    estimate_rows, plan_physical,
+)
+from repro.query.optimize import (                               # noqa: F401
+    choose_build_side, fuse_filter_project, optimize, prune_columns,
+    push_down_filters,
+)
+from repro.query.exec import (                                   # noqa: F401
+    Catalog, Executor, Result, sql_like_query,
+)
+from repro.query.serve import QueryRecord, QueryServer           # noqa: F401

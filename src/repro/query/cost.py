@@ -1,0 +1,334 @@
+"""Bandwidth-aware cost model — the optimizer's pricing of physical
+alternatives.
+
+The paper's lesson (Fig. 2/5, and the related HBM benchmarking work) is
+that *placement* and *access pattern* decide achieved bandwidth, not peak
+numbers: partitioned columns stream every channel, a congested layout
+collapses to crossbar bandwidth, and a build side must be replicated per
+engine.  This module prices each (impl, placement, pass-count) alternative
+of every physical operator with ``channels.tpu_bandwidth_model`` /
+``channels.fpga_bandwidth_model`` plus the roofline constants, so the
+executor can pick placement per column instead of requiring callers to
+pre-``place()`` tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.core.channels import (
+    fpga_bandwidth_model, tpu_bandwidth_model, TPU_HBM_GBPS,
+)
+from repro.core.join import HT_CAPACITY
+from repro.query import logical as L
+
+BYTES_PER_VALUE = 4                 # int32/float32 columns
+
+# streaming efficiencies + fixed launch overheads (sec) per operator —
+# the crossover that makes the xla/pallas choice size-dependent
+XLA_STREAM_EFF = 0.70
+PALLAS_STREAM_EFF = 0.92
+XLA_CALL_OVERHEAD = 2e-6
+PALLAS_CALL_OVERHEAD = 12e-6
+
+
+# --------------------------------------------------------------------------- #
+# catalog statistics
+
+@dataclasses.dataclass
+class ColumnStats:
+    lo: int
+    hi: int
+    n_distinct: Optional[int] = None
+
+    @property
+    def domain(self) -> int:
+        return max(int(self.hi) - int(self.lo) + 1, 1)
+
+
+@dataclasses.dataclass
+class TableStats:
+    num_rows: int
+    columns: Tuple[str, ...]
+    ranges: Dict[str, ColumnStats]
+
+
+def selectivity(stats: ColumnStats, lo: int, hi: int) -> float:
+    """Uniform-domain estimate of a range predicate's selectivity."""
+    span = min(hi, stats.hi) - max(lo, stats.lo) + 1
+    return min(max(span, 0) / stats.domain, 1.0)
+
+
+def estimate_rows(node: L.Node, stats: Dict[str, TableStats]) -> float:
+    """Cardinality estimate — drives build/probe side selection and the
+    multi-pass join block count."""
+    if isinstance(node, L.Scan):
+        return float(stats[node.table].num_rows)
+    if isinstance(node, (L.Filter, L.FilterProject)):
+        base = estimate_rows(node.child, stats)
+        cs = _column_stats(node.child, node.column, stats)
+        sel = selectivity(cs, node.lo, node.hi) if cs else 0.33
+        return base * sel
+    if isinstance(node, L.Join):
+        l = estimate_rows(node.left, stats)
+        r = estimate_rows(node.right, stats)
+        cs = _column_stats(node.right, node.on, stats)
+        # containment: P(probe key hits build side) ~ |build| / |key domain|
+        hit = min(r / cs.domain, 1.0) if cs else 0.1
+        return l * hit
+    if isinstance(node, L.Project):
+        return estimate_rows(node.child, stats)
+    if isinstance(node, (L.Aggregate, L.TrainGLM)):
+        return 1.0
+    raise TypeError(node)
+
+
+def _column_stats(node: L.Node, column: str,
+                  stats: Dict[str, TableStats]) -> Optional[ColumnStats]:
+    for n in L.walk(node):
+        if isinstance(n, L.Scan):
+            t = stats.get(n.table)
+            if t and column in t.ranges:
+                return t.ranges[column]
+    return None
+
+
+def key_is_unique(node: L.Node, column: str,
+                  stats: Dict[str, TableStats]) -> bool:
+    """Whether ``column`` is (provably) duplicate-free in ``node``'s output.
+
+    The hash-join build requires unique keys — a probe row matches at most
+    one build row — so putting a duplicate-keyed side on the build side
+    would silently change join semantics, not just its cost.  Scans check
+    catalog distinct counts; filters/projections preserve uniqueness; a
+    join output is conservatively treated as non-unique.
+    """
+    if isinstance(node, L.Scan):
+        t = stats.get(node.table)
+        cs = t.ranges.get(column) if t else None
+        return bool(cs and cs.n_distinct is not None
+                    and cs.n_distinct == t.num_rows)
+    if isinstance(node, (L.Filter, L.FilterProject, L.Project)):
+        return key_is_unique(node.child, column, stats)
+    return False
+
+
+# --------------------------------------------------------------------------- #
+# the model
+
+class CostModel:
+    """Prices one physical operator alternative at a time.
+
+    ``hardware="tpu"`` uses the mesh/ICI analogue; ``hardware="fpga"``
+    prices with the paper's calibrated AD9H7 channel model (32 ports,
+    256 MiB separation when partitioned, 0 when congested) — the same
+    decision procedure on either bandwidth curve.
+    """
+
+    def __init__(self, n_engines: int, *, hardware: str = "tpu",
+                 allow_pallas: Optional[bool] = None):
+        self.n_engines = n_engines
+        self.hardware = hardware
+        if allow_pallas is None:
+            # interpret-mode pallas on CPU is emulation, never a win
+            allow_pallas = jax.default_backend() == "tpu"
+        self.allow_pallas = allow_pallas
+
+    def impls(self) -> Tuple[str, ...]:
+        return ("xla", "pallas") if self.allow_pallas else ("xla",)
+
+    def bandwidth_gbps(self, placement: str) -> float:
+        """Aggregate streaming bandwidth of one operator under a placement."""
+        if self.hardware == "fpga":
+            sep = {"partitioned": 256, "replicated": 256, "congested": 0}
+            bw = fpga_bandwidth_model(32, sep[placement])
+            # replicated = one engine's share of the separated layout
+            return bw / 32 if placement == "replicated" else bw
+        if placement == "partitioned":
+            return tpu_bandwidth_model(self.n_engines, True)
+        if placement == "congested":
+            return tpu_bandwidth_model(self.n_engines, False)
+        return TPU_HBM_GBPS            # replicated: one engine, local HBM
+
+    def stream_cost(self, n_bytes: float, *, impl: str, placement: str,
+                    n_passes: int = 1, flops: float = 0.0) -> float:
+        """Seconds to stream ``n_bytes`` under (impl, placement), roofline-
+        combined with any compute the operator does."""
+        eff = PALLAS_STREAM_EFF if impl == "pallas" else XLA_STREAM_EFF
+        over = PALLAS_CALL_OVERHEAD if impl == "pallas" else XLA_CALL_OVERHEAD
+        bw = self.bandwidth_gbps(placement) * 1e9 * eff
+        t_mem = n_passes * n_bytes / bw
+        t_compute = flops / PEAK_FLOPS
+        return max(t_mem, t_compute) + over * n_passes
+
+    def broadcast_cost(self, n_bytes: float) -> float:
+        """Replicating a build side / dataset to every engine over ICI."""
+        if self.n_engines <= 1:
+            return 0.0
+        return n_bytes * (self.n_engines - 1) / ICI_BW
+
+
+# --------------------------------------------------------------------------- #
+# physical planning
+
+@dataclasses.dataclass
+class PhysNode:
+    """A logical node annotated with the chosen physical alternative."""
+    op: str
+    logical: L.Node
+    impl: str
+    placement: str
+    n_passes: int
+    est_rows_out: float
+    cost_s: float
+    gbps: float
+    alternatives: Dict[str, float]
+    children: Tuple["PhysNode", ...] = ()
+
+    @property
+    def total_cost_s(self) -> float:
+        return self.cost_s + sum(c.total_cost_s for c in self.children)
+
+    def describe(self) -> str:
+        return (f"impl={self.impl} placement={self.placement} "
+                f"passes={self.n_passes} est_rows={self.est_rows_out:.0f} "
+                f"cost={self.cost_s * 1e6:.1f}us bw={self.gbps:.0f}GB/s")
+
+
+def _choose(model: CostModel, n_bytes: float, placements: Tuple[str, ...],
+            *, n_passes: int = 1, flops: float = 0.0):
+    """argmin over impl x placement; returns (impl, placement, cost, alts)."""
+    alts = {}
+    for impl in model.impls():
+        for pl in placements:
+            alts[f"{impl}/{pl}"] = model.stream_cost(
+                n_bytes, impl=impl, placement=pl, n_passes=n_passes,
+                flops=flops)
+    best = min(alts, key=alts.get)
+    impl, pl = best.split("/")
+    return impl, pl, alts[best], alts
+
+
+def plan_physical(node: L.Node, stats: Dict[str, TableStats],
+                  model: CostModel, *, role: str = "stream") -> PhysNode:
+    """Annotate a (logically optimized) plan with per-operator impl,
+    per-column placement, pass counts, and costs.
+
+    ``role`` is the placement context a parent imposes: the build side of a
+    join and a TrainGLM dataset are ``"build"`` (must be replicated, the
+    paper's URAM/Fig. 10a replication); everything else streams.
+    """
+    rows = estimate_rows(node, stats)
+
+    if isinstance(node, L.Scan):
+        n_cols = len(L.output_columns(node, {t: s.columns
+                                             for t, s in stats.items()}))
+        n_bytes = stats[node.table].num_rows * BYTES_PER_VALUE * n_cols
+        if role == "build":
+            cost = model.broadcast_cost(n_bytes)
+            return PhysNode("scan", node, "xla", "replicated", 1, rows,
+                            cost, model.bandwidth_gbps("replicated"),
+                            {"xla/replicated": cost})
+        impl, pl, cost, alts = _choose(model, n_bytes,
+                                       ("partitioned", "congested"))
+        return PhysNode("scan", node, impl, pl, 1, rows, cost,
+                        model.bandwidth_gbps(pl), alts)
+
+    if isinstance(node, (L.Filter, L.FilterProject)):
+        child = plan_physical(node.child, stats, model, role=role)
+        in_rows = estimate_rows(node.child, stats)
+        n_out_cols = len(node.columns) if isinstance(node, L.FilterProject) \
+            else 1
+        n_bytes = in_rows * BYTES_PER_VALUE + rows * BYTES_PER_VALUE \
+            * n_out_cols
+        placements = ("replicated",) if role == "build" \
+            else ("partitioned", "congested")
+        impl, pl, cost, alts = _choose(model, n_bytes, placements)
+        op = "filter_project" if isinstance(node, L.FilterProject) \
+            else "filter"
+        return PhysNode(op, node, impl, pl, 1, rows, cost,
+                        model.bandwidth_gbps(pl), alts, (child,))
+
+    if isinstance(node, L.Join):
+        if not key_is_unique(node.right, node.on, stats):
+            warnings.warn(
+                f"join build side key '{node.on}' is not provably unique: "
+                "the hash-join build keeps one row per key, so duplicate "
+                "build keys return at most one match per probe row "
+                "(the paper's unique-S semantics)", RuntimeWarning,
+                stacklevel=2)
+        left = plan_physical(node.left, stats, model, role="stream")
+        right = plan_physical(node.right, stats, model, role="build")
+        build_rows = estimate_rows(node.right, stats)
+        probe_rows = estimate_rows(node.left, stats)
+        n_passes = max(-(-int(build_rows) // HT_CAPACITY), 1)
+        n_bytes = probe_rows * BYTES_PER_VALUE
+        impl, pl, cost, alts = _choose(model, n_bytes,
+                                       ("partitioned", "congested"),
+                                       n_passes=n_passes)
+        return PhysNode("join", node, impl, pl, n_passes, rows, cost,
+                        model.bandwidth_gbps(pl), alts, (left, right))
+
+    if isinstance(node, L.Project):
+        child = plan_physical(node.child, stats, model, role=role)
+        n_bytes = rows * BYTES_PER_VALUE * len(node.columns)
+        impl, pl, cost, alts = _choose(model, n_bytes, ("partitioned",))
+        return PhysNode("project", node, impl, pl, 1, rows, cost,
+                        model.bandwidth_gbps(pl), alts, (child,))
+
+    if isinstance(node, L.Aggregate):
+        child = plan_physical(node.child, stats, model, role=role)
+        in_rows = estimate_rows(node.child, stats)
+        n_bytes = in_rows * BYTES_PER_VALUE
+        impl, pl, cost, alts = _choose(model, n_bytes, ("partitioned",))
+        return PhysNode("aggregate", node, impl, pl, 1, 1.0, cost,
+                        model.bandwidth_gbps(pl), alts, (child,))
+
+    if isinstance(node, L.TrainGLM):
+        child = plan_physical(node.child, stats, model, role="build")
+        in_rows = estimate_rows(node.child, stats)
+        k = len(node.grid)
+        d = len(node.features)
+        dataset = in_rows * BYTES_PER_VALUE * (d + 1)
+        # each engine streams its LOCAL replica (Fig. 10a); without
+        # replication every job reads one remote copy — the flat line
+        flops = 6.0 * node.epochs * k * in_rows * d
+        alts = {
+            "xla/replicated": model.broadcast_cost(dataset)
+            + model.stream_cost(dataset * node.epochs * k,
+                                impl="xla", placement="partitioned",
+                                flops=flops),
+            "xla/congested": model.stream_cost(
+                dataset * node.epochs * k, impl="xla",
+                placement="congested", flops=flops),
+        }
+        best = min(alts, key=alts.get)
+        impl, pl = best.split("/")
+        return PhysNode("train_glm", node, impl, pl, 1, float(k),
+                        alts[best], model.bandwidth_gbps(pl), alts, (child,))
+
+    raise TypeError(node)
+
+
+def column_placements(phys: PhysNode) -> Dict[Tuple[str, str], str]:
+    """(table, column) -> chosen placement, read off the scan leaves — the
+    decision callers previously had to make by hand with ``place()``."""
+    out: Dict[Tuple[str, str], str] = {}
+
+    def visit(p: PhysNode):
+        if p.op == "scan":
+            node = p.logical
+            cols = node.columns or ()
+            for c in cols:
+                out[(node.table, c)] = p.placement
+            if not cols:
+                out[(node.table, "*")] = p.placement
+        for c in p.children:
+            visit(c)
+
+    visit(phys)
+    return out

@@ -1,0 +1,198 @@
+"""Logical plan IR — the role MonetDB's relational algebra plays in the
+paper's integration story (§II/III).
+
+A query is an immutable tree of frozen dataclass nodes; the fluent ``Q``
+builder turns the hand-written operator sequences of
+``examples/analytics_pipeline.py`` into declarative plans.  Nodes are
+hashable, so a node IS its own dedup key (structural equality); the
+``signature``/``literals`` pair splits a plan into a compile-cache key
+(structure + masked constants) and the constant vector that is fed to the
+compiled executable as traced scalars.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+from repro.core.sgd_glm import HyperParams
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """Base logical operator."""
+
+    def children(self) -> Tuple["Node", ...]:
+        return tuple(v for f in dataclasses.fields(self)
+                     for v in [getattr(self, f.name)] if isinstance(v, Node))
+
+
+@dataclasses.dataclass(frozen=True)
+class Scan(Node):
+    table: str
+    columns: Optional[Tuple[str, ...]] = None     # None = every column
+
+
+@dataclasses.dataclass(frozen=True)
+class Filter(Node):
+    child: Node
+    column: str
+    lo: int
+    hi: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Join(Node):
+    """Inner equi-join; ``right`` is the build side after optimization."""
+    left: Node
+    right: Node
+    on: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Project(Node):
+    child: Node
+    columns: Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterProject(Node):
+    """Fusion product of Filter+Project: one selection->gather physical op
+    (no intermediate index table materialized twice)."""
+    child: Node
+    column: str
+    lo: int
+    hi: int
+    columns: Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregate(Node):
+    child: Node
+    op: str                                       # sum | count | mean
+    column: str
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainGLM(Node):
+    """In-database ML (paper §VI) as a plan node — the doppioDB UDF."""
+    child: Node
+    features: Tuple[str, ...]
+    label: str
+    grid: Tuple[HyperParams, ...]
+    kind: str = "logreg"
+    epochs: int = 5
+
+
+class Q:
+    """Fluent builder: ``Q.scan("lineitem").filter("qty", 30, 49)...``"""
+
+    def __init__(self, node: Node):
+        self.node = node
+
+    @staticmethod
+    def scan(table: str, columns: Optional[Sequence[str]] = None) -> "Q":
+        return Q(Scan(table, tuple(columns) if columns is not None else None))
+
+    def filter(self, column: str, lo: int, hi: int) -> "Q":
+        return Q(Filter(self.node, column, int(lo), int(hi)))
+
+    def join(self, other: "Q | Node", on: str) -> "Q":
+        rhs = other.node if isinstance(other, Q) else other
+        return Q(Join(self.node, rhs, on))
+
+    def project(self, *columns: str) -> "Q":
+        return Q(Project(self.node, tuple(columns)))
+
+    def aggregate(self, op: str, column: str) -> "Q":
+        return Q(Aggregate(self.node, op, column))
+
+    def sum(self, column: str) -> "Q":
+        return self.aggregate("sum", column)
+
+    def count(self, column: str) -> "Q":
+        return self.aggregate("count", column)
+
+    def mean(self, column: str) -> "Q":
+        return self.aggregate("mean", column)
+
+    def train_glm(self, features: Sequence[str], label: str,
+                  grid: Sequence[HyperParams], *, kind: str = "logreg",
+                  epochs: int = 5) -> "Q":
+        return Q(TrainGLM(self.node, tuple(features), label, tuple(grid),
+                          kind, epochs))
+
+
+# --------------------------------------------------------------------------- #
+# plan keys
+
+_LITERAL_FIELDS = {"lo", "hi"}      # masked out of the compile-cache key
+
+
+def signature(node: Node):
+    """Structural key with predicate constants masked: two queries that
+    differ only in range bounds share one compiled executable."""
+    parts = [type(node).__name__]
+    for f in dataclasses.fields(node):
+        v = getattr(node, f.name)
+        if isinstance(v, Node):
+            parts.append(signature(v))
+        elif f.name in _LITERAL_FIELDS:
+            parts.append("?")
+        else:
+            parts.append(v)
+    return tuple(parts)
+
+
+def literals(node: Node) -> Tuple[int, ...]:
+    """The masked constants, pre-order — the traced args of the compiled
+    plan (same order as ``signature`` masks them)."""
+    out = []
+    for f in dataclasses.fields(node):
+        v = getattr(node, f.name)
+        if isinstance(v, Node):
+            out.extend(literals(v))
+        elif f.name in _LITERAL_FIELDS:
+            out.append(int(v))
+    return tuple(out)
+
+
+def walk(node: Node):
+    yield node
+    for c in node.children():
+        yield from walk(c)
+
+
+def output_columns(node: Node, table_columns) -> Tuple[str, ...]:
+    """Columns a node produces.  ``table_columns``: table name -> tuple."""
+    if isinstance(node, Scan):
+        return node.columns if node.columns is not None \
+            else tuple(table_columns[node.table])
+    if isinstance(node, (Project, FilterProject)):
+        return node.columns
+    if isinstance(node, Filter):
+        return output_columns(node.child, table_columns)
+    if isinstance(node, Join):
+        l = output_columns(node.left, table_columns)
+        r = output_columns(node.right, table_columns)
+        return l + tuple(c for c in r if c not in l)
+    if isinstance(node, Aggregate):
+        return (node.column,)
+    if isinstance(node, TrainGLM):
+        return node.features + (node.label,)
+    raise TypeError(node)
+
+
+def pformat(node: Node, indent: int = 0, note=None) -> str:
+    """Readable plan tree (EXPLAIN-style)."""
+    pad = "  " * indent
+    label = type(node).__name__
+    attrs = []
+    for f in dataclasses.fields(node):
+        v = getattr(node, f.name)
+        if not isinstance(v, Node) and f.name != "grid":
+            attrs.append(f"{f.name}={v}")
+    extra = f"  [{note(node)}]" if note and note(node) else ""
+    lines = [f"{pad}{label}({', '.join(attrs)}){extra}"]
+    for c in node.children():
+        lines.append(pformat(c, indent + 1, note))
+    return "\n".join(lines)

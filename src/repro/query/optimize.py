@@ -1,0 +1,148 @@
+"""Rule-based logical optimizer — the MonetDB optimizer role (paper §III).
+
+Rewrites, in order:
+  1. predicate pushdown below joins (filter the side that owns the column
+     before probing — the single biggest data-movement saving),
+  2. projection pruning (scan only the columns the plan ever touches; a
+     column store reads per-column, so pruning is pure bandwidth),
+  3. build/probe side selection by estimated cardinality (the small side
+     builds the hash table; fewer multi-pass rescans of Fig. 8b),
+  4. selection->gather fusion (Filter+Project -> one FilterProject op).
+
+Each rule is a pure Node -> Node rewrite; ``optimize`` composes them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Set
+
+from repro.query import logical as L
+from repro.query.cost import TableStats, estimate_rows, key_is_unique
+
+
+def _table_columns(stats: Dict[str, TableStats]) -> Dict[str, tuple]:
+    return {t: s.columns for t, s in stats.items()}
+
+
+def _rewrite_children(node: L.Node, fn) -> L.Node:
+    updates = {f.name: fn(getattr(node, f.name))
+               for f in dataclasses.fields(node)
+               if isinstance(getattr(node, f.name), L.Node)}
+    return dataclasses.replace(node, **updates) if updates else node
+
+
+# --------------------------------------------------------------------------- #
+# rule 1: predicate pushdown
+
+def push_down_filters(node: L.Node, stats: Dict[str, TableStats]) -> L.Node:
+    cols = _table_columns(stats)
+
+    def push(n: L.Node) -> L.Node:
+        n = _rewrite_children(n, push)
+        if isinstance(n, L.Filter) and isinstance(n.child, L.Join):
+            join = n.child
+            in_left = n.column in L.output_columns(join.left, cols)
+            in_right = n.column in L.output_columns(join.right, cols)
+            if in_left and not in_right:
+                return dataclasses.replace(
+                    join, left=push(L.Filter(join.left, n.column, n.lo,
+                                             n.hi)))
+            if in_right and not in_left:
+                return dataclasses.replace(
+                    join, right=push(L.Filter(join.right, n.column, n.lo,
+                                              n.hi)))
+        return n
+
+    return push(node)
+
+
+# --------------------------------------------------------------------------- #
+# rule 2: projection pruning
+
+def prune_columns(node: L.Node, stats: Dict[str, TableStats],
+                  required: Optional[Set[str]] = None) -> L.Node:
+    """Narrow every Scan to the columns the plan above it actually reads."""
+    cols = _table_columns(stats)
+
+    if isinstance(node, L.Scan):
+        avail = cols[node.table]
+        if required is None:
+            return node
+        keep = tuple(c for c in avail if c in required)
+        return L.Scan(node.table, keep)
+    if isinstance(node, L.Aggregate):
+        return dataclasses.replace(
+            node, child=prune_columns(node.child, stats, {node.column}))
+    if isinstance(node, (L.Project, L.FilterProject)):
+        need = set(node.columns)
+        if isinstance(node, L.FilterProject):
+            need.add(node.column)
+        return dataclasses.replace(
+            node, child=prune_columns(node.child, stats, need))
+    if isinstance(node, L.Filter):
+        need = None if required is None else set(required) | {node.column}
+        return dataclasses.replace(
+            node, child=prune_columns(node.child, stats, need))
+    if isinstance(node, L.Join):
+        if required is None:
+            lneed = rneed = None
+        else:
+            lcols = set(L.output_columns(node.left, cols))
+            rcols = set(L.output_columns(node.right, cols))
+            lneed = (set(required) & lcols) | {node.on}
+            rneed = (set(required) & rcols) | {node.on}
+        return dataclasses.replace(
+            node, left=prune_columns(node.left, stats, lneed),
+            right=prune_columns(node.right, stats, rneed))
+    if isinstance(node, L.TrainGLM):
+        need = set(node.features) | {node.label}
+        return dataclasses.replace(
+            node, child=prune_columns(node.child, stats, need))
+    return _rewrite_children(node, lambda c: prune_columns(c, stats,
+                                                           required))
+
+
+# --------------------------------------------------------------------------- #
+# rule 3: build side selection
+
+def choose_build_side(node: L.Node, stats: Dict[str, TableStats]) -> L.Node:
+    def visit(n: L.Node) -> L.Node:
+        n = _rewrite_children(n, visit)
+        if isinstance(n, L.Join):
+            l_uni = key_is_unique(n.left, n.on, stats)
+            r_uni = key_is_unique(n.right, n.on, stats)
+            if l_uni and not r_uni:
+                # correctness, not cost: the hash-join build assumes unique
+                # keys, so a duplicate-keyed side must probe
+                return L.Join(n.right, n.left, n.on)
+            if l_uni and r_uni and \
+                    estimate_rows(n.left, stats) < estimate_rows(n.right,
+                                                                 stats):
+                # smaller side builds the hash table: fewer HT_CAPACITY
+                # passes, smaller replication broadcast
+                return L.Join(n.right, n.left, n.on)
+        return n
+
+    return visit(node)
+
+
+# --------------------------------------------------------------------------- #
+# rule 4: selection -> gather fusion
+
+def fuse_filter_project(node: L.Node) -> L.Node:
+    def visit(n: L.Node) -> L.Node:
+        n = _rewrite_children(n, visit)
+        if isinstance(n, L.Project) and isinstance(n.child, L.Filter):
+            f = n.child
+            return L.FilterProject(f.child, f.column, f.lo, f.hi, n.columns)
+        return n
+
+    return visit(node)
+
+
+def optimize(node: L.Node, stats: Dict[str, TableStats]) -> L.Node:
+    node = push_down_filters(node, stats)
+    node = choose_build_side(node, stats)
+    node = prune_columns(node, stats)
+    node = fuse_filter_project(node)
+    return node

@@ -1,0 +1,202 @@
+"""Batched query-serving front-end — the ROADMAP's many-clients path.
+
+Clients ``submit()`` logical plans (thread-safe); ``drain()`` processes the
+pending set as one admission batch:
+
+  1. **dedup** — structurally identical plans (hashable nodes) execute once
+     and fan the result out;
+  2. **micro-batch** — selection->aggregate queries over the same column
+     that differ only in range bounds stack their (lo, hi) pairs and run as
+     ONE vmapped executable (size-bucketed to powers of two so the compile
+     cache stays small);
+  3. everything else goes through the executor's plan cache individually.
+
+Per-query latency, throughput, dedup/batch counters, and the executor's
+plan-cache hit rate come back from ``stats()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.query import logical as L
+from repro.query.exec import Executor
+
+
+@dataclasses.dataclass
+class QueryRecord:
+    qid: int
+    node: L.Node
+    result: object = None
+    latency_s: float = 0.0
+    path: str = "exec"              # exec | dedup | microbatch
+
+
+def _microbatch_key(node: L.Node) -> Optional[tuple]:
+    """Aggregate(op, col, Filter(Scan(t), fcol, ?, ?)) -> grouping key."""
+    if isinstance(node, L.Aggregate) and isinstance(node.child, L.Filter) \
+            and isinstance(node.child.child, L.Scan):
+        scan = node.child.child
+        return (scan.table, scan.columns, node.child.column, node.op,
+                node.column)
+    return None
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class QueryServer:
+    """Accepts many concurrent queries and serves them in admission batches."""
+
+    def __init__(self, executor: Executor):
+        self.executor = executor
+        self._lock = threading.Lock()
+        self._pending: List[QueryRecord] = []
+        self._next_qid = 0
+        self.history: List[QueryRecord] = []
+        self.n_submitted = 0
+        self.n_deduped = 0
+        self.n_microbatched = 0
+        self.n_batches = 0
+        self._batched_fns: Dict[tuple, object] = {}
+        self.batched_cache_hits = 0
+        self._total_drain_s = 0.0
+
+    # -- client surface ----------------------------------------------------- #
+
+    def submit(self, q) -> int:
+        node = q.node if isinstance(q, L.Q) else q
+        with self._lock:
+            qid = self._next_qid
+            self._next_qid += 1
+            self._pending.append(QueryRecord(qid, node))
+            self.n_submitted += 1
+            return qid
+
+    def query(self, q):
+        """Convenience: submit one query and drain immediately."""
+        qid = self.submit(q)
+        return self.drain()[qid]
+
+    # -- serving ------------------------------------------------------------ #
+
+    def drain(self) -> Dict[int, object]:
+        """Process every pending query; returns qid -> result."""
+        with self._lock:
+            batch, self._pending = self._pending, []
+        if not batch:
+            return {}
+        t0 = time.perf_counter()
+
+        # 1. dedup identical plans (frozen nodes hash structurally)
+        first_of: Dict[L.Node, QueryRecord] = {}
+        dups: List[Tuple[QueryRecord, QueryRecord]] = []
+        unique: List[QueryRecord] = []
+        for rec in batch:
+            if rec.node in first_of:
+                rec.path = "dedup"
+                dups.append((rec, first_of[rec.node]))
+                self.n_deduped += 1
+            else:
+                first_of[rec.node] = rec
+                unique.append(rec)
+
+        # 2. micro-batch compatible selections over the same column
+        groups: Dict[tuple, List[QueryRecord]] = {}
+        singles: List[QueryRecord] = []
+        for rec in unique:
+            key = _microbatch_key(rec.node)
+            if key is None:
+                singles.append(rec)
+            else:
+                groups.setdefault(key, []).append(rec)
+        for key, recs in groups.items():
+            if len(recs) == 1:
+                singles.extend(recs)
+                continue
+            self._run_microbatch(key, recs)
+
+        # 3. the rest, one executor call each (plan cache still applies)
+        for rec in singles:
+            t = time.perf_counter()
+            rec.result = self.executor.execute(rec.node).value
+            rec.latency_s = time.perf_counter() - t
+
+        for rec, src in dups:
+            rec.result = src.result
+            rec.latency_s = src.latency_s
+
+        self._total_drain_s += time.perf_counter() - t0
+        self.history.extend(batch)
+        return {rec.qid: rec.result for rec in batch}
+
+    def _run_microbatch(self, key: tuple, recs: List[QueryRecord]):
+        table, cols, fcol, op, acol = key
+        t = time.perf_counter()
+        los = [r.node.child.lo for r in recs]
+        his = [r.node.child.hi for r in recs]
+        size = _next_pow2(len(recs))
+        los += [los[-1]] * (size - len(recs))     # pad to the size bucket
+        his += [his[-1]] * (size - len(recs))
+        fn_key = (key, size)
+        if fn_key in self._batched_fns:
+            self.batched_cache_hits += 1
+        else:
+            self._batched_fns[fn_key] = self._build_batched(op)
+        fn = self._batched_fns[fn_key]
+        fdata = self.executor.placed(table, fcol, "partitioned")
+        adata = self.executor.placed(table, acol, "partitioned")
+        out = jax.device_get(fn(jnp.asarray(los, jnp.int32),
+                                jnp.asarray(his, jnp.int32), fdata, adata))
+        dt = time.perf_counter() - t
+        self.n_batches += 1
+        for i, rec in enumerate(recs):
+            rec.result = out[i].item()
+            rec.latency_s = dt                    # batch-amortized latency
+            rec.path = "microbatch"
+            self.n_microbatched += 1
+
+    @staticmethod
+    def _build_batched(op: str):
+        def one(lo, hi, fcol, acol):
+            mask = (fcol >= lo) & (fcol <= hi)
+            if op == "sum":
+                return jnp.sum(jnp.where(mask, acol, 0))
+            if op == "count":
+                return jnp.sum(mask.astype(jnp.int32))
+            if op == "mean":
+                s = jnp.sum(jnp.where(mask, acol, 0).astype(jnp.float32))
+                c = jnp.sum(mask.astype(jnp.float32))
+                return s / jnp.maximum(c, 1.0)
+            raise ValueError(op)
+
+        return jax.jit(jax.vmap(one, in_axes=(0, 0, None, None)))
+
+    # -- reporting ---------------------------------------------------------- #
+
+    def stats(self) -> dict:
+        lat = [r.latency_s for r in self.history]
+        n = len(self.history)
+        out = {
+            "n_queries": n,
+            "n_deduped": self.n_deduped,
+            "n_microbatched": self.n_microbatched,
+            "n_microbatches": self.n_batches,
+            "batched_kernel_cache_hits": self.batched_cache_hits,
+            "total_serve_s": self._total_drain_s,
+            "queries_per_s": n / self._total_drain_s
+            if self._total_drain_s else 0.0,
+            "latency_mean_s": sum(lat) / n if n else 0.0,
+            "latency_max_s": max(lat) if lat else 0.0,
+        }
+        out.update(self.executor.stats_dict())
+        return out

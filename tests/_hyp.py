@@ -1,0 +1,60 @@
+"""Hypothesis compatibility shim for the test suite.
+
+Tier-1 must collect and run even when ``hypothesis`` is not installed (the
+container bakes in jax/numpy/pytest only).  When hypothesis is available it
+is re-exported untouched; otherwise a tiny deterministic fallback runs each
+``@given`` test over a fixed number of seeded samples.  Only the strategy
+surface this suite actually uses (``st.integers``) is emulated.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st   # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import inspect
+    import random
+
+    _FALLBACK_CAP = 8          # keep CPU tier-1 fast; hypothesis gets the
+                               # full max_examples when installed
+
+    class _Integers:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng: random.Random) -> int:
+            return rng.randint(self.lo, self.hi)
+
+    class st:                  # noqa: N801 — mirrors `strategies as st`
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Integers:
+            return _Integers(min_value, max_value)
+
+    def settings(max_examples: int = 8, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            passthrough = [p for name, p in sig.parameters.items()
+                           if name not in strategies]
+
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_max_examples", _FALLBACK_CAP),
+                        _FALLBACK_CAP)
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            # expose only the fixture params to pytest (no __wrapped__: pytest
+            # would unwrap and rediscover the strategy params as fixtures)
+            wrapper.__signature__ = sig.replace(parameters=passthrough)
+            return wrapper
+        return deco

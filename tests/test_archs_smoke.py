@@ -96,4 +96,4 @@ def test_scan_equals_unrolled(host_mesh, arch):
                                     jax.random.key(1))
         l1, _ = mb.loss_fn(params, batch, rules, exact_counts=False)
         l2, _ = mb.loss_fn(params, batch, rules, exact_counts=True)
-        assert abs(float(l1) - float(l2)) < 5e-4   # bf16 reduction-order noise
+        assert abs(float(l1) - float(l2)) < 1e-3   # bf16 reduction-order noise

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels.sgd.ops import sgd_train
 from repro.kernels.sgd.ref import loss_ref, sgd_ref

@@ -1,0 +1,92 @@
+"""Serving front-end: dedup, micro-batching, stats."""
+import numpy as np
+
+from repro.columnar.table import Table
+from repro.query import Catalog, Executor, Q, QueryServer
+
+
+def _server(rng, n=4096):
+    big = Table.from_arrays("big", {
+        "v": rng.integers(0, 100, size=n).astype(np.int32),
+        "w": rng.integers(1, 50, size=n).astype(np.int32),
+        "k": rng.integers(0, 1000, size=n).astype(np.int32)})
+    small = Table.from_arrays("small", {
+        "k": np.arange(0, 1000, 2, dtype=np.int32)})
+    cat = Catalog.from_tables(big, small)
+    return QueryServer(Executor(cat)), big, small
+
+
+def _expected_sum(big, lo, hi):
+    v = np.asarray(big.column("v"))
+    w = np.asarray(big.column("w"))
+    return int(w[(v >= lo) & (v <= hi)].sum())
+
+
+def test_identical_queries_dedup(rng):
+    srv, big, _ = _server(rng)
+    q = Q.scan("big").filter("v", 10, 30).sum("w")
+    qids = [srv.submit(q) for _ in range(5)]
+    res = srv.drain()
+    exp = _expected_sum(big, 10, 30)
+    assert all(int(res[i]) == exp for i in qids)
+    assert srv.n_deduped == 4
+
+
+def test_compatible_selections_microbatch(rng):
+    srv, big, _ = _server(rng)
+    bounds = [(0, 9), (10, 19), (20, 29), (30, 39), (40, 49)]
+    qids = [srv.submit(Q.scan("big").filter("v", lo, hi).sum("w"))
+            for lo, hi in bounds]
+    res = srv.drain()
+    for qid, (lo, hi) in zip(qids, bounds):
+        assert int(res[qid]) == _expected_sum(big, lo, hi)
+    assert srv.n_microbatched == 5
+    assert srv.n_batches == 1           # ONE vmapped executable served all 5
+
+
+def test_batched_kernel_cache_hits_across_drains(rng):
+    srv, big, _ = _server(rng)
+    for round_ in range(3):
+        for lo in (0, 20, 40, 60):      # same size bucket every round
+            srv.submit(Q.scan("big").filter("v", lo, lo + 9).sum("w"))
+        srv.drain()
+    assert srv.n_batches == 3
+    assert srv.batched_cache_hits == 2  # compiled once, reused twice
+
+
+def test_mixed_batch_routes_each_query_correctly(rng):
+    srv, big, small = _server(rng)
+    k = np.asarray(big.column("k"))
+    v = np.asarray(big.column("v"))
+    w = np.asarray(big.column("w"))
+
+    q_join = (Q.scan("big").join(Q.scan("small"), on="k")
+               .filter("v", 0, 60).sum("w"))
+    ids_sel = [srv.submit(Q.scan("big").filter("v", lo, lo + 9).sum("w"))
+               for lo in (0, 30)]
+    id_join = srv.submit(q_join)
+    id_dup = srv.submit(q_join)
+    res = srv.drain()
+
+    for qid, lo in zip(ids_sel, (0, 30)):
+        assert int(res[qid]) == _expected_sum(big, lo, lo + 9)
+    m = (v <= 60) & np.isin(k, np.asarray(small.column("k")))
+    assert int(res[id_join]) == int(w[m].sum())
+    assert res[id_dup] == res[id_join]
+    s = srv.stats()
+    assert s["n_queries"] == 4
+    assert s["n_deduped"] == 1
+    assert s["n_microbatched"] == 2
+    assert s["queries_per_s"] > 0
+    assert s["latency_mean_s"] > 0
+
+
+def test_count_and_mean_microbatch(rng):
+    srv, big, _ = _server(rng)
+    v = np.asarray(big.column("v"))
+    w = np.asarray(big.column("w"))
+    ids = [srv.submit(Q.scan("big").filter("v", lo, lo + 19).count("w"))
+           for lo in (0, 40)]
+    res = srv.drain()
+    for qid, lo in zip(ids, (0, 40)):
+        assert int(res[qid]) == int(((v >= lo) & (v <= lo + 19)).sum())
