@@ -14,12 +14,15 @@ def main() -> None:
     sys.path.insert(0, os.path.join(_ROOT, "src"))
     sys.path.insert(0, _ROOT)
     from benchmarks.paper_figures import ALL
+    from benchmarks.bench_join_duplicates import join_duplicates
     smoke = "--smoke" in sys.argv
     only = None
     if "--only" in sys.argv:
         only = sys.argv[sys.argv.index("--only") + 1]
 
-    fns = ALL
+    # join_duplicates runs full-scale only: smoke mode keeps the two fast
+    # figures, and bench_join_duplicates.py --smoke covers the smoke case
+    fns = ALL + [join_duplicates]
     if smoke:
         fns = [fn for fn in ALL if fn.__name__ in
                ("fig2_bandwidth", "tab3_roofline")]

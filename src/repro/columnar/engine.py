@@ -47,9 +47,14 @@ def select_range(table: Table, column: str, lo: int, hi: int, *,
     return Table(f"{table.name}.sel", {"idx": Column(compacted, "idx")})
 
 
-def join(left: Table, right: Table, on: str, *, impl: str = "xla") -> Table:
-    """Inner join: right is the small (build) side.  Returns matched index
-    pairs (l_idx, r_idx) — MonetDB's join produces exactly such BAT pairs."""
+def join(left: Table, right: Table, on: str, *, impl: str = "xla",
+         unique: Optional[bool] = None) -> Table:
+    """Inner join: right is the (build) side.  Returns the full multiset of
+    matched index pairs (l_idx, r_idx) — MonetDB's join produces exactly
+    such BAT pairs.  Duplicate build keys emit one pair per match (the
+    multi-match sorted-bucket kernel); ``unique=True`` keeps the paper's
+    unique-S open-addressing fast path (at most one match per probe row,
+    identical pairs when the keys really are unique)."""
     assert left.plan is not None
     n_build = right.num_rows
     if n_build > join_core.HT_CAPACITY:
@@ -59,13 +64,46 @@ def join(left: Table, right: Table, on: str, *, impl: str = "xla") -> Table:
             f"HT_CAPACITY={join_core.HT_CAPACITY}: multi-pass join will "
             f"rescan the probe side {passes}x (Fig. 8b linear regime)",
             RuntimeWarning, stacklevel=2)
-    s_idx, total = join_core.join_distributed(
-        right.column(on), left.column(on), left.plan, impl=impl)
-    n = int(total)
-    l_idx = compact_positions(s_idx >= 0, n)
-    r_idx = s_idx[l_idx]
+    if unique:
+        s_idx, total = join_core.join_distributed(
+            right.column(on), left.column(on), left.plan, impl=impl)
+        n = int(total)
+        l_idx = compact_positions(s_idx >= 0, n)
+        r_idx = s_idx[l_idx]
+    else:
+        l_idx, r_idx = _join_pairs(right.column(on), left.column(on),
+                                   left.plan, impl=impl)
     return Table("join", {"l_idx": Column(l_idx, "l_idx"),
                           "r_idx": Column(r_idx, "r_idx")})
+
+
+def _join_pairs(s_keys: jax.Array, l_keys: jax.Array, plan, *,
+                impl: str = "xla"):
+    """Compacted (l_idx, s_idx) pair columns from the distributed multi-
+    match join.  The per-shard pair totals are exact even when a shard's
+    fixed pair list overflows, so one retry with the measured capacity
+    always suffices."""
+    # the kernels reserve key values for pad sentinels (negative range for
+    # multi-pass padding, 2**31-1 for the Pallas table pad); this is the
+    # eager layer, so reject out-of-domain catalog data instead of
+    # silently corrupting pairs
+    for name, keys in (("build", s_keys), ("probe", l_keys)):
+        if keys.shape[0] and (int(jnp.min(keys)) < 0
+                              or int(jnp.max(keys)) >= 2 ** 31 - 1):
+            raise ValueError(
+                f"join {name} keys must be in [0, 2**31 - 2]: values "
+                "outside it collide with the kernel pad sentinels")
+    out = join_core.join_distributed_multi(s_keys, l_keys, plan, impl=impl)
+    l_buf, s_buf, totals, overflow = out
+    if bool(jnp.any(overflow)):
+        need = int(jnp.max(totals))
+        l_buf, s_buf, totals, overflow = join_core.join_distributed_multi(
+            s_keys, l_keys, plan, impl=impl,
+            max_out_per_shard=max(need, 64))
+        assert not bool(jnp.any(overflow))
+    n = int(jnp.sum(totals))
+    pos = compact_positions(l_buf >= 0, n)
+    return l_buf[pos], s_buf[pos]
 
 
 def gather(table: Table, idx: jax.Array, columns: Sequence[str],

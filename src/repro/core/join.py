@@ -18,6 +18,7 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.channels import ChannelPlan
+from repro.kernels.join import join as join_join
 from repro.kernels.join import ref as join_ref
 from repro.kernels.join import ops as join_ops
 from repro.kernels.join.join import DEFAULT_BLOCK
@@ -52,13 +53,15 @@ def join_distributed(s_keys, l_keys, plan: ChannelPlan, *,
         for p in range(n_passes):                     # rescan L per S block
             s_blk = jax.lax.dynamic_slice_in_dim(
                 s_keys, p * HT_CAPACITY, HT_CAPACITY)
-            idx_p, _, dropped = join_ops.hash_join(
+            res = join_ops.hash_join(
                 s_blk, l_local, table_size=table_size,
                 probe_depth=probe_depth, block=block, impl=impl,
                 interpret=interpret)
+            idx_p = res.s_idx
             s_idx = jnp.where((s_idx < 0) & (idx_p >= 0),
                               idx_p + p * HT_CAPACITY, s_idx)
-            dropped_max = jnp.maximum(dropped_max, dropped.astype(jnp.int32))
+            dropped_max = jnp.maximum(dropped_max,
+                                      res.dropped.astype(jnp.int32))
         count = jnp.sum((s_idx >= 0).astype(jnp.int32))
         return s_idx, count[None], dropped_max[None]
 
@@ -77,3 +80,69 @@ def join_distributed(s_keys, l_keys, plan: ChannelPlan, *,
                 "Increase table_size or probe_depth.", RuntimeWarning,
                 stacklevel=2)
     return s_idx, jnp.sum(counts)
+
+
+def join_distributed_multi(s_keys, l_keys, plan: ChannelPlan, *,
+                           max_out_per_shard: int = None,
+                           block: int = DEFAULT_BLOCK,
+                           impl: str = "xla", interpret: bool = True):
+    """Duplicate-capable scale-out join: s_keys (N_S,) replicated (may hold
+    duplicate keys), l_keys (N_L,) partitioned per plan.  Keys must be in
+    [0, 2**31 - 2]: negative values collide with the multi-pass padding
+    sentinels below and 2**31 - 1 is the Pallas table pad (the eager
+    engine layer validates this; jitted callers must guarantee it).
+
+    Every engine probes its L shard against the sorted-bucket layout of S
+    and materializes its slice of the GLOBAL (l_idx, s_idx) pair multiset
+    into a fixed per-shard pair list (output compaction happens per shard:
+    each shard's pairs are contiguous, -1-padded to ``max_out_per_shard``).
+    Multi-pass beyond HT_CAPACITY rescans L per S block, appending each
+    pass's pairs at a running offset — the Fig. 8b linear regime, now with
+    variable-cardinality output.
+
+    Returns (l_idx (N_SHARDS*max_out,) with GLOBAL probe positions,
+    s_idx likewise, per-shard exact pair totals (N_SHARDS,), per-shard
+    overflow flags (N_SHARDS,)).  ``total`` stays exact even when a shard's
+    list overflows, so callers can re-run with the right capacity.
+    """
+    mesh, axis = plan.mesh, plan.axis
+    n_shards = mesh.shape[axis]
+    n_s = s_keys.shape[0]
+    shard = l_keys.shape[0] // n_shards
+    if max_out_per_shard is None:
+        max_out_per_shard = max(2 * shard, 64)
+    max_out = max_out_per_shard
+    n_passes = -(-n_s // HT_CAPACITY) if n_s else 0
+    pad_s = n_passes * HT_CAPACITY - n_s
+    if pad_s:
+        # negative sentinels sort below every real (non-negative) key and
+        # can never equal a probe key, so padded buckets are never matched
+        pads = -(2 ** 30) - jnp.arange(pad_s, dtype=jnp.int32)
+        s_keys = jnp.concatenate([s_keys, pads])
+
+    def engine(l_local):
+        shard_id = jax.lax.axis_index(axis)
+        l_buf = jnp.full((max_out,), -1, jnp.int32)
+        s_buf = jnp.full((max_out,), -1, jnp.int32)
+        total = jnp.zeros((), jnp.int32)
+        for p in range(n_passes):                     # rescan L per S block
+            s_blk = jax.lax.dynamic_slice_in_dim(
+                s_keys, p * HT_CAPACITY, HT_CAPACITY)
+            s_sorted, order = join_ref.bucket_build(s_blk)
+            if impl == "pallas":
+                # counts-only kernel: the offset emission below gathers the
+                # pairs itself, so no match-matrix egress is computed
+                start, counts = join_join.probe_counts_pallas(
+                    s_sorted, l_local, block=block, interpret=interpret)
+            else:
+                start, counts = join_ref.bucket_probe(s_sorted, l_local)
+            l_buf, s_buf, t_p = join_ref.emit_pairs_into(
+                l_buf, s_buf, order, start, counts, out_base=total,
+                l_base=shard_id * shard, s_base=p * HT_CAPACITY)
+            total = total + t_p
+        return l_buf, s_buf, total[None], (total > max_out)[None]
+
+    fn = shard_map(engine, mesh=mesh, in_specs=(P(axis),),
+                   out_specs=(P(axis), P(axis), P(axis), P(axis)),
+                   check_rep=False)
+    return fn(l_keys)

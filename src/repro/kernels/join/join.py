@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.join import ref
+
 DEFAULT_BLOCK = 4096
 KNUTH = -1640531527            # 2654435761 as int32
 
@@ -38,6 +40,9 @@ def _probe_kernel(ht_keys_ref, ht_vals_ref, l_ref, sidx_ref, cnt_ref, *,
         s_idx = jnp.where(hit, val, s_idx)
     sidx_ref[...] = s_idx
     cnt_ref[0] = jnp.sum((s_idx >= 0).astype(jnp.int32))
+
+
+DEFAULT_MATCH_CAP = 8          # in-kernel egress lines per probe row
 
 
 def probe_pallas(ht_keys, ht_vals, l_keys, *, block: int = DEFAULT_BLOCK,
@@ -70,3 +75,142 @@ def probe_pallas(ht_keys, ht_vals, l_keys, *, block: int = DEFAULT_BLOCK,
         ],
         interpret=interpret,
     )(ht_keys, ht_vals, l_keys)
+
+
+# ---- duplicate-capable multi-match probe ---------------------------------- #
+#
+# The paper's probe pipeline assumes unique S: one egress line per probe.
+# The multi-match kernel probes the sorted-bucket layout instead: the VMEM-
+# resident table is (s_sorted, order); each probe row locates its bucket
+# with a branchless binary search (a compile-time-unrolled log2(ts) loop —
+# the II analogue of the chain walk) and emits up to MATCH_CAP matched
+# build indices on a widened egress bus, plus the bucket (start, count) so
+# the XLA overflow pass can materialize chains longer than the cap.
+
+
+PAD_SENTINEL = 2 ** 31 - 1     # sorts above every legal key (see ops.py
+                               # key-domain contract), never equals a probe
+
+
+def _pad_table(s_sorted, order=None):
+    """Pad the sorted table (and optionally its order map) to the next
+    power of two with the +inf sentinel, for the unrolled binary search.
+    One shared implementation so both Pallas entry points stay in sync."""
+    n_s = s_sorted.shape[0]
+    ts = ref.next_pow2(max(n_s, 2))
+    if ts != n_s:
+        pad = jnp.full((ts - n_s,), jnp.int32(PAD_SENTINEL), jnp.int32)
+        s_sorted = jnp.concatenate([s_sorted, pad])
+        if order is not None:
+            order = jnp.concatenate(
+                [order, jnp.full((ts - n_s,), -1, jnp.int32)])
+    return (s_sorted, order) if order is not None else s_sorted
+
+
+def _lower_bound(a, q, ts: int, *, strict: bool):
+    """Branchless vectorized binary search, unrolled log2(ts)+1 steps.
+    strict=False: first index with a[idx] >= q (bucket start);
+    strict=True:  first index with a[idx] >  q (bucket end)."""
+    lo = jnp.zeros(q.shape, jnp.int32)
+    hi = jnp.full(q.shape, ts, jnp.int32)
+    for _ in range(max(ts - 1, 1).bit_length() + 1):
+        mid = (lo + hi) >> 1
+        amid = jnp.take(a, jnp.clip(mid, 0, ts - 1), axis=0)
+        go_right = (amid <= q) if strict else (amid < q)
+        active = lo < hi
+        lo = jnp.where(active & go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+    return lo
+
+
+def _probe_multi_kernel(s_sorted_ref, order_ref, l_ref, mat_ref, start_ref,
+                        cnt_ref, *, cap: int):
+    ts = s_sorted_ref.shape[0]
+    a = s_sorted_ref[...]
+    l = l_ref[...]
+    start = _lower_bound(a, l, ts, strict=False)
+    cnt = _lower_bound(a, l, ts, strict=True) - start
+    start_ref[...] = start
+    cnt_ref[...] = cnt
+    order = order_ref[...]
+    ks = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    src = jnp.clip(start[:, None] + ks, 0, ts - 1)
+    sval = jnp.take(order, src, axis=0)
+    mat_ref[...] = jnp.where(ks < cnt[:, None], sval, -1)
+
+
+def probe_multi_pallas(s_sorted, order, l_keys, *,
+                       cap: int = DEFAULT_MATCH_CAP,
+                       block: int = DEFAULT_BLOCK, interpret: bool = False):
+    """Multi-match probe of the sorted-bucket table.
+
+    Returns (mat (N_L, cap) matched build indices / -1, start (N_L,),
+    counts (N_L,)) — ``counts`` is the EXACT bucket size even beyond the
+    cap, so the caller's overflow pass knows what the bus truncated.
+    Keys must be < 2**31 - 1 (the pad sentinel)."""
+    import functools
+    n = l_keys.shape[0]
+    assert n % block == 0, (n, block)
+    nb = n // block
+    s_sorted, order = _pad_table(s_sorted, order)
+    ts = s_sorted.shape[0]
+    kernel = functools.partial(_probe_multi_kernel, cap=cap)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((ts,), lambda i: (0,)),       # table stays in VMEM
+            pl.BlockSpec((ts,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),    # L stream
+        ],
+        out_specs=[
+            pl.BlockSpec((block, cap), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, cap), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(s_sorted, order, l_keys)
+
+
+def _probe_counts_kernel(s_sorted_ref, l_ref, start_ref, cnt_ref):
+    ts = s_sorted_ref.shape[0]
+    a = s_sorted_ref[...]
+    l = l_ref[...]
+    start = _lower_bound(a, l, ts, strict=False)
+    start_ref[...] = start
+    cnt_ref[...] = _lower_bound(a, l, ts, strict=True) - start
+
+
+def probe_counts_pallas(s_sorted, l_keys, *, block: int = DEFAULT_BLOCK,
+                        interpret: bool = False):
+    """Bucket (start, count) probe without the match-matrix egress — for
+    callers that materialize pairs themselves (the distributed operator's
+    offset emission), so no widened egress bus is computed and discarded.
+    Returns (start (N_L,), counts (N_L,)); counts are exact."""
+    n = l_keys.shape[0]
+    assert n % block == 0, (n, block)
+    nb = n // block
+    s_sorted = _pad_table(s_sorted)
+    ts = s_sorted.shape[0]
+    return pl.pallas_call(
+        _probe_counts_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((ts,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(s_sorted, l_keys)

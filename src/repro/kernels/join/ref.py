@@ -5,6 +5,10 @@ columns.  For every L[i] that equals some S[j], emit the pair (j, i) — the
 materialization step the paper insists on including.  The oracle uses
 sort/searchsorted (CPU-friendly, no hash), the kernel uses the paper's
 hash-table-with-bounded-probing design; tests compare them.
+
+Two build layouts coexist: the open-addressing table (unique S, the
+paper's II=1 fast path) and the sorted-bucket layout (duplicate-capable,
+multi-match — see ``bucket_build``/``bucket_probe``/``emit_pairs_into``).
 """
 from __future__ import annotations
 
@@ -84,3 +88,63 @@ def probe_ref(ht_keys, ht_vals, l_keys, probe_depth: int = 4):
         hit = (ht_keys[slot] == l_keys) & (s_idx < 0)
         s_idx = jnp.where(hit, ht_vals[slot], s_idx)
     return s_idx, s_idx >= 0
+
+
+# ---- duplicate-capable sorted-bucket table -------------------------------- #
+#
+# The open-addressing table above keeps ONE row per key (the paper's
+# unique-S fast path).  For relational joins the build side may carry
+# duplicates; the bucketed layout below is the "sorted buckets" point in
+# the chained/bucketed design space: rows sorted by key form one bucket
+# per distinct key, a probe locates its bucket with two binary searches
+# (the chain walk collapses to [start, start+count)), and `order` plays
+# the role of the chain's next-pointers.  No entry is ever dropped, so the
+# bounded-build drop buffer does not exist on this path.
+
+def bucket_build(s_keys):
+    """Sorted-bucket build: returns (s_sorted (N_S,), order (N_S,)) where
+    ``order`` maps sorted positions back to original build-row indices.
+    Duplicate keys land in one contiguous bucket (stable sort)."""
+    order = jnp.argsort(s_keys).astype(jnp.int32)
+    return s_keys[order], order
+
+
+def bucket_probe(s_sorted, l_keys):
+    """Multi-match probe: for every probe key, the bucket's start offset in
+    the sorted build side and its EXACT match count (no cap)."""
+    start = jnp.searchsorted(s_sorted, l_keys, side="left").astype(jnp.int32)
+    end = jnp.searchsorted(s_sorted, l_keys, side="right").astype(jnp.int32)
+    return start, end - start
+
+
+def emit_pairs_into(l_buf, s_buf, order, start, counts, *, out_base,
+                    l_base=0, s_base=0):
+    """Materialize the ragged match lists into a fixed pair-list buffer.
+
+    Writes pair ``t`` of this probe batch (global rank: pairs ordered by
+    probe row, then bucket position) into slots ``out_base + t`` of
+    ``l_buf``/``s_buf`` (both (max_out,), -1-padded), shifting emitted
+    indices by ``l_base``/``s_base`` (shard / multi-pass offsets).  Pure
+    gather formulation: output slot t finds its probe row by binary search
+    over the exclusive prefix sum of ``counts``, so emission is exact for
+    any chain length — this is the no-cap XLA path; the Pallas kernel's
+    capped egress reuses the same prefix-sum ranks.  Pairs whose slot falls
+    beyond the buffer are not written (the caller checks ``total`` against
+    the capacity).  Returns (l_buf, s_buf, total-matches-this-batch).
+    """
+    n_l = counts.shape[0]
+    max_out = l_buf.shape[0]
+    base = jnp.cumsum(counts) - counts              # exclusive prefix sum
+    total = jnp.sum(counts)
+    t = jnp.arange(max_out, dtype=jnp.int32)
+    rel = t - out_base
+    # last probe row whose first-pair rank is <= rel; zero-count rows share
+    # their successor's rank and side="right" skips past them
+    i = jnp.clip(jnp.searchsorted(base, rel, side="right").astype(jnp.int32)
+                 - 1, 0, n_l - 1)
+    k = rel - base[i]
+    valid = (rel >= 0) & (rel < total)
+    src = jnp.clip(start[i] + k, 0, order.shape[0] - 1)
+    l_buf = jnp.where(valid, i + l_base, l_buf)
+    s_buf = jnp.where(valid, order[src] + s_base, s_buf)
+    return l_buf, s_buf, total

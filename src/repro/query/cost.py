@@ -14,7 +14,6 @@ pre-``place()`` tables.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -77,9 +76,10 @@ def estimate_rows(node: L.Node, stats: Dict[str, TableStats]) -> float:
         l = estimate_rows(node.left, stats)
         r = estimate_rows(node.right, stats)
         cs = _column_stats(node.right, node.on, stats)
-        # containment: P(probe key hits build side) ~ |build| / |key domain|
-        hit = min(r / cs.domain, 1.0) if cs else 0.1
-        return l * hit
+        # expected matches per probe row ~ |build| / |key domain|: exceeds
+        # 1 when the build side carries duplicates (multi-match output)
+        matches = r / cs.domain if cs else 0.1
+        return l * matches
     if isinstance(node, L.Project):
         return estimate_rows(node.child, stats)
     if isinstance(node, (L.Aggregate, L.TrainGLM)):
@@ -101,11 +101,14 @@ def key_is_unique(node: L.Node, column: str,
                   stats: Dict[str, TableStats]) -> bool:
     """Whether ``column`` is (provably) duplicate-free in ``node``'s output.
 
-    The hash-join build requires unique keys — a probe row matches at most
-    one build row — so putting a duplicate-keyed side on the build side
-    would silently change join semantics, not just its cost.  Scans check
-    catalog distinct counts; filters/projections preserve uniqueness; a
-    join output is conservatively treated as non-unique.
+    No longer a correctness gate — the multi-match sorted-bucket kernel
+    joins duplicate build keys exactly — but still a physical-planning
+    hint: provably-unique build keys take the paper's open-addressing
+    II=1 fast path (op "join"); everything else takes the multi-match
+    path (op "join_multi") whose output cardinality the cost model prices
+    via the expected chain length.  Scans check catalog distinct counts;
+    filters/projections preserve uniqueness; a join output is
+    conservatively treated as non-unique.
     """
     if isinstance(node, L.Scan):
         t = stats.get(node.table)
@@ -115,6 +118,18 @@ def key_is_unique(node: L.Node, column: str,
     if isinstance(node, (L.Filter, L.FilterProject, L.Project)):
         return key_is_unique(node.child, column, stats)
     return False
+
+
+def expected_chain_length(node: L.Node, column: str,
+                          stats: Dict[str, TableStats]) -> float:
+    """Average bucket (duplicate-chain) size of ``column`` in ``node``'s
+    output — the multi-match probe's per-row work and output multiplier."""
+    rows = max(estimate_rows(node, stats), 1.0)
+    cs = _column_stats(node, column, stats)
+    if cs is None:
+        return 1.0
+    distinct = cs.n_distinct if cs.n_distinct else min(rows, cs.domain)
+    return max(rows / max(float(distinct), 1.0), 1.0)
 
 
 # --------------------------------------------------------------------------- #
@@ -254,23 +269,32 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
                         model.bandwidth_gbps(pl), alts, (child,))
 
     if isinstance(node, L.Join):
-        if not key_is_unique(node.right, node.on, stats):
-            warnings.warn(
-                f"join build side key '{node.on}' is not provably unique: "
-                "the hash-join build keeps one row per key, so duplicate "
-                "build keys return at most one match per probe row "
-                "(the paper's unique-S semantics)", RuntimeWarning,
-                stacklevel=2)
         left = plan_physical(node.left, stats, model, role="stream")
         right = plan_physical(node.right, stats, model, role="build")
         build_rows = estimate_rows(node.right, stats)
         probe_rows = estimate_rows(node.left, stats)
         n_passes = max(-(-int(build_rows) // HT_CAPACITY), 1)
-        n_bytes = probe_rows * BYTES_PER_VALUE
+        unique = key_is_unique(node.right, node.on, stats)
+        if unique:
+            # open-addressing fast path: one egress line per probe row
+            n_bytes = probe_rows * BYTES_PER_VALUE
+            op = "join"
+        else:
+            # multi-match probe: per-row work scales with the expected
+            # duplicate-chain length, and the variable-cardinality pair
+            # list (l_idx, s_idx) is materialized output.  Only the probe
+            # stream is rescanned per pass; the pair list is written once,
+            # so its bytes are divided by n_passes before stream_cost
+            # multiplies everything back up
+            chain = expected_chain_length(node.right, node.on, stats)
+            out_pairs = rows
+            n_bytes = (probe_rows * BYTES_PER_VALUE * max(chain, 1.0)
+                       + 2 * out_pairs * BYTES_PER_VALUE / n_passes)
+            op = "join_multi"
         impl, pl, cost, alts = _choose(model, n_bytes,
                                        ("partitioned", "congested"),
                                        n_passes=n_passes)
-        return PhysNode("join", node, impl, pl, n_passes, rows, cost,
+        return PhysNode(op, node, impl, pl, n_passes, rows, cost,
                         model.bandwidth_gbps(pl), alts, (left, right))
 
     if isinstance(node, L.Project):

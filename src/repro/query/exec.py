@@ -34,7 +34,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.query import logical as L
 from repro.query.cost import (
     ColumnStats, CostModel, PhysNode, TableStats, column_placements,
-    plan_physical,
+    key_is_unique, plan_physical,
 )
 from repro.query.optimize import optimize
 
@@ -164,8 +164,12 @@ class Executor:
 
     def _fusable(self, node: L.Node) -> bool:
         """Aggregate-rooted pipelines of scan/filter/join fuse into one
-        executable.  Build-side filters stay eager: post-probe re-checking
-        is only equivalent for unique build keys, which we don't enforce."""
+        executable.  The fused body evaluates joins as one-line-per-probe
+        masks, which is only the full pair multiset when the build key is
+        provably unique — duplicate-keyed build sides (op "join_multi")
+        lower eagerly onto the pair-list engine operator instead.
+        Build-side filters also stay eager for the same one-row-per-key
+        reason."""
         if not isinstance(node, L.Aggregate):
             return False
         ok = True
@@ -181,6 +185,8 @@ class Executor:
                 visit(n.left, "probe")
                 if not isinstance(n.right, L.Scan):
                     ok = False
+                elif not key_is_unique(n.right, n.on, self.catalog.stats):
+                    ok = False          # multi-match output: pair list, not mask
                 return
             if isinstance(n, (L.Project, L.Aggregate)):
                 visit(n.child, side)
@@ -328,7 +334,9 @@ class Executor:
                 rt = eval_node(n.right)
                 if lt.plan is None:
                     lt = lt.place(self.plans["partitioned"])
-                pairs = engine.join(lt, rt, n.on, impl=impl_of(n))
+                pairs = engine.join(
+                    lt, rt, n.on, impl=impl_of(n),
+                    unique=key_is_unique(n.right, n.on, self.catalog.stats))
                 cols = {}
                 for c in lt.columns:
                     cols[c] = Column(jnp.take(lt.column(c),

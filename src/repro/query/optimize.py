@@ -17,7 +17,7 @@ import dataclasses
 from typing import Dict, Optional, Set
 
 from repro.query import logical as L
-from repro.query.cost import TableStats, estimate_rows, key_is_unique
+from repro.query.cost import TableStats, estimate_rows
 
 
 def _table_columns(stats: Dict[str, TableStats]) -> Dict[str, tuple]:
@@ -106,21 +106,16 @@ def prune_columns(node: L.Node, stats: Dict[str, TableStats],
 # rule 3: build side selection
 
 def choose_build_side(node: L.Node, stats: Dict[str, TableStats]) -> L.Node:
+    """Smaller side builds, purely by estimated cardinality: fewer
+    HT_CAPACITY passes, smaller replication broadcast.  Duplicate-keyed
+    build sides are fine — the multi-match sorted-bucket kernel emits the
+    exact pair multiset either way, so uniqueness no longer vetoes the
+    swap (it only selects the physical fast path downstream)."""
     def visit(n: L.Node) -> L.Node:
         n = _rewrite_children(n, visit)
-        if isinstance(n, L.Join):
-            l_uni = key_is_unique(n.left, n.on, stats)
-            r_uni = key_is_unique(n.right, n.on, stats)
-            if l_uni and not r_uni:
-                # correctness, not cost: the hash-join build assumes unique
-                # keys, so a duplicate-keyed side must probe
-                return L.Join(n.right, n.left, n.on)
-            if l_uni and r_uni and \
-                    estimate_rows(n.left, stats) < estimate_rows(n.right,
-                                                                 stats):
-                # smaller side builds the hash table: fewer HT_CAPACITY
-                # passes, smaller replication broadcast
-                return L.Join(n.right, n.left, n.on)
+        if isinstance(n, L.Join) and \
+                estimate_rows(n.left, stats) < estimate_rows(n.right, stats):
+            return L.Join(n.right, n.left, n.on)
         return n
 
     return visit(node)

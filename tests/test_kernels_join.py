@@ -29,7 +29,9 @@ def test_join_exact_vs_oracle(n_s, seed):
     s = jnp.asarray(r.choice(10**5, size=n_s, replace=False), jnp.int32)
     l = jnp.asarray(r.integers(0, 10**5, size=1024), jnp.int32)
     ts = ref.next_pow2(max(2 * n_s, 16))
-    s_idx, total, dropped = hash_join(s, l, table_size=ts, probe_depth=8)
+    s_idx, total, dropped, overflowed = hash_join(s, l, table_size=ts,
+                                                  probe_depth=8)
+    assert not bool(overflowed)
     hit = np.asarray(s_idx) >= 0
     expected = np.isin(np.asarray(l), np.asarray(s))
     np.testing.assert_array_equal(hit, expected)          # exact membership
@@ -47,16 +49,16 @@ def test_join_invariant_under_l_permutation(seed):
     l = r.integers(0, 5000, size=512).astype(np.int32)
     perm = r.permutation(512)
     ts = ref.next_pow2(512)
-    _, t1, _ = hash_join(s, jnp.asarray(l), table_size=ts, probe_depth=8)
-    _, t2, _ = hash_join(s, jnp.asarray(l[perm]), table_size=ts,
-                         probe_depth=8)
+    t1 = hash_join(s, jnp.asarray(l), table_size=ts, probe_depth=8).total
+    t2 = hash_join(s, jnp.asarray(l[perm]), table_size=ts,
+                   probe_depth=8).total
     assert int(t1) == int(t2)
 
 
 def test_materialize_dummies(rng):
     s = jnp.asarray([5, 7, 9], jnp.int32)
     l = jnp.asarray([7, 1, 9, 2], jnp.int32)
-    s_idx, total, _ = hash_join(s, l, table_size=16, probe_depth=8)
+    s_idx, total, _, _ = hash_join(s, l, table_size=16, probe_depth=8)
     s_out, l_out = materialize(s_idx, l, s)
     assert int(total) == 2
     np.testing.assert_array_equal(np.asarray(l_out), [7, -1, 9, -1])

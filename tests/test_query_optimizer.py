@@ -63,9 +63,10 @@ def test_build_side_swaps_to_smaller(catalog):
     assert join.right.table == "small"
 
 
-def test_nonunique_key_never_becomes_build_side(rng):
-    """Correctness over cost: the hash-join build assumes unique keys, so a
-    duplicate-keyed side must probe even when it is the smaller one."""
+def test_duplicate_keyed_side_becomes_build_side(rng):
+    """The multi-match kernel lifts the old uniqueness veto: the smaller
+    side builds even when its key carries duplicates (formerly refused),
+    and the physical plan prices it as the multi-match op."""
     dup = Table.from_arrays("dup", {
         "k": rng.integers(0, 50, size=1024).astype(np.int32)})
     uni = Table.from_arrays("uni", {
@@ -74,8 +75,40 @@ def test_nonunique_key_never_becomes_build_side(rng):
     q = Q.scan("uni").join(Q.scan("dup"), on="k").count("k")
     out = choose_build_side(q.node, cat.stats)
     join = out.child
-    assert join.left.table == "dup"        # smaller but duplicate: probes
-    assert join.right.table == "uni"
+    assert join.left.table == "uni"        # larger side probes
+    assert join.right.table == "dup"       # smaller duplicate side builds
+    phys = plan_physical(out, cat.stats, CostModel(4))
+    ops = {p.op for p in _walk_phys(phys)}
+    assert "join_multi" in ops             # priced as the duplicate probe
+
+
+def test_chain_length_prices_duplicate_probe(rng):
+    """A duplicate-heavy build side costs more than a unique one of the
+    same row count: the expected chain length multiplies the probe work
+    and the pair-list output is materialized bytes."""
+    from repro.query.cost import expected_chain_length
+    dup = Table.from_arrays("dup", {
+        "k": rng.integers(0, 32, size=1024).astype(np.int32)})
+    uni = Table.from_arrays("uni", {
+        "k": np.arange(0, 1024, dtype=np.int32)})
+    big = Table.from_arrays("probe", {
+        "k": rng.integers(0, 1024, size=8192).astype(np.int32),
+        "w": rng.integers(0, 9, size=8192).astype(np.int32)})
+    cat = Catalog.from_tables(dup, uni, big)
+    chain = expected_chain_length(Q.scan("dup").node, "k", cat.stats)
+    assert chain > 8.0                         # ~1024/32 duplicates per key
+    assert expected_chain_length(Q.scan("uni").node, "k",
+                                 cat.stats) == pytest.approx(1.0)
+    model = CostModel(4)
+    q_dup = Q.scan("probe").join(Q.scan("dup"), on="k").sum("w")
+    q_uni = Q.scan("probe").join(Q.scan("uni"), on="k").sum("w")
+    cost_dup = [p for p in _walk_phys(plan_physical(q_dup.node, cat.stats,
+                                                    model))
+                if p.op == "join_multi"][0].cost_s
+    cost_uni = [p for p in _walk_phys(plan_physical(q_uni.node, cat.stats,
+                                                    model))
+                if p.op == "join"][0].cost_s
+    assert cost_dup > cost_uni
 
 
 def test_filter_project_fusion(catalog):
