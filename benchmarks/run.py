@@ -15,7 +15,12 @@ def main() -> None:
     sys.path.insert(0, _ROOT)
     from benchmarks.paper_figures import ALL
     from benchmarks.bench_join_duplicates import join_duplicates
+    from benchmarks.calibrate import calibrate
     smoke = "--smoke" in sys.argv
+
+    # measured per-backend stream efficiencies / overheads for the cost
+    # model (repro.query.cost.load_calibration picks this file up)
+    calibrate(os.path.join(_ROOT, "BENCH_calibration.json"), smoke=smoke)
     only = None
     if "--only" in sys.argv:
         only = sys.argv[sys.argv.index("--only") + 1]

@@ -7,17 +7,21 @@ like MonetDB's optimizer picks the UDF implementation.
 """
 from __future__ import annotations
 
+import dataclasses
 import warnings
-from typing import Optional, Sequence
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.columnar.table import Column, Table
+from repro.columnar.table import Column, MorselSpec, Table
 from repro.core import join as join_core
 from repro.core import selection as sel_core
 from repro.core import sgd_glm
 from repro.core.channels import ChannelPlan
+from repro.kernels.join import ref as join_ref
+from repro.kernels.sgd import ref as sgd_ref
 
 
 def compact_positions(valid: jax.Array, n: int) -> jax.Array:
@@ -127,3 +131,156 @@ def train_glm(table: Table, features: Sequence[str], label: str,
     b = table.column(label).astype(jnp.float32)
     return sgd_glm.hyperparam_search(a, b, grid, plan, kind=kind,
                                      epochs=epochs, impl=impl)
+
+
+# --------------------------------------------------------------------------- #
+# streaming (morsel-driven) operators
+#
+# The eager operators above materialize whole-column intermediates (BAT
+# style).  The streaming forms below are partition-granular: state that
+# outlives one morsel is explicit.  A JoinBuild is the product of a
+# pipeline breaker — probe morsels stream against it; aggregate carries
+# accumulate across morsels; train_glm_stream threads model parameters
+# through epoch x morsel order so it reproduces the whole-column SGD
+# minibatch sequence exactly when morsels align with minibatches.
+
+@dataclasses.dataclass
+class JoinBuild:
+    """Sorted-bucket build state.  ``s_sorted``/``order`` are the layout of
+    ``kernels/join/ref.bucket_build``; probe morsels binary-search their
+    bucket.  ``values`` holds raw build columns for unique-key gathers,
+    ``csums`` exclusive prefix sums over the key-sorted column for exact
+    duplicate-bucket sums (the fused pair-list aggregate)."""
+    on: str
+    unique: bool
+    s_sorted: jax.Array
+    order: jax.Array
+    values: Dict[str, jax.Array]
+    csums: Dict[str, jax.Array]
+
+    @property
+    def n_build(self) -> int:
+        return int(self.s_sorted.shape[0])
+
+    def flat(self) -> Tuple[jax.Array, ...]:
+        """Deterministic flattening for jitted step signatures."""
+        return (self.s_sorted, self.order,
+                *(self.values[c] for c in sorted(self.values)),
+                *(self.csums[c] for c in sorted(self.csums)))
+
+
+def join_build(right: Table, on: str, value_cols: Sequence[str] = (), *,
+               unique: bool = False,
+               plan: Optional[ChannelPlan] = None) -> JoinBuild:
+    """Pipeline breaker: consume the whole build side once, producing the
+    state probe morsels stream against.  With ``plan``, every array is
+    replicated across the mesh (the paper's per-engine build replication)."""
+    keys = right.column(on)
+    s_sorted, order = join_ref.bucket_build(keys)
+    values: Dict[str, jax.Array] = {}
+    csums: Dict[str, jax.Array] = {}
+    for c in value_cols:
+        col = right.column(c)
+        if unique:
+            values[c] = col
+        else:
+            sc = col[order]
+            csums[c] = jnp.concatenate(
+                [jnp.zeros((1,), sc.dtype), jnp.cumsum(sc)])
+    if plan is not None:
+        rep = NamedSharding(plan.mesh, P())
+        put = lambda a: jax.device_put(a, rep)           # noqa: E731
+        s_sorted, order = put(s_sorted), put(order)
+        values = {k: put(v) for k, v in values.items()}
+        csums = {k: put(v) for k, v in csums.items()}
+    return JoinBuild(on, unique, s_sorted, order, values, csums)
+
+
+def join_probe_morsel(build: JoinBuild, keys: jax.Array):
+    """Probe one morsel of keys: (start, count) of each key's bucket in the
+    sorted build side — exact multi-match counts, no capacity cap."""
+    return join_ref.bucket_probe(build.s_sorted, keys)
+
+
+def bucket_sums(csum: jax.Array, start: jax.Array, count: jax.Array):
+    """Sum of a build column over each probe row's bucket, via the
+    exclusive prefix sums a JoinBuild carries."""
+    return csum[start + count] - csum[start]
+
+
+def select_range_morsel(col: jax.Array, lo, hi,
+                        mask: jax.Array) -> jax.Array:
+    """Streaming range selection: narrow the morsel's row mask in place —
+    no index materialization between pipeline stages."""
+    return mask & (col >= lo) & (col <= hi)
+
+
+def aggregate_sum_stream(carry, values: jax.Array, mask: jax.Array,
+                         weight: Optional[jax.Array] = None):
+    """Fold one morsel into a running sum.  ``weight`` is the per-row match
+    multiplicity contributed by duplicate-keyed joins upstream."""
+    w = mask.astype(values.dtype) if weight is None else \
+        jnp.where(mask, weight, 0).astype(values.dtype)
+    return carry + jnp.sum(values * w)
+
+
+def train_glm_stream(table: Table, features: Sequence[str], label: str,
+                     grid, plan: ChannelPlan, *, kind: str = "logreg",
+                     epochs: int = 5, minibatch: int = 16,
+                     morsel_rows: Optional[int] = None):
+    """Morsel-streamed hyper-parameter search: each epoch streams the
+    morsels in table order with the K models' parameters as the carry, so
+    the minibatch update sequence — and therefore the trained weights —
+    matches ``train_glm`` exactly when morsels align with minibatches
+    (CoCoA-style block rotation with block = morsel)."""
+    m = table.num_rows
+    assert m % minibatch == 0, (m, minibatch)
+    if morsel_rows is None:
+        morsel_rows = m
+    morsel_rows = max((min(morsel_rows, m) // minibatch) * minibatch,
+                      minibatch)
+    spec = MorselSpec(m, morsel_rows)
+    k = len(grid)
+    lrs = jnp.array([g.lr for g in grid], jnp.float32)
+    l2s = jnp.array([g.l2 for g in grid], jnp.float32)
+    xs = jnp.zeros((k, len(features)), jnp.float32)
+    rep = NamedSharding(plan.mesh, P())      # dataset replication (Fig. 10a)
+
+    def morsel_arrays(i):
+        start, stop = spec.bounds(i)
+        a = jnp.stack([table.column(f)[start:stop].astype(jnp.float32)
+                       for f in features], axis=1)
+        b = table.column(label)[start:stop].astype(jnp.float32)
+        return jax.device_put(a, rep), jax.device_put(b, rep)
+
+    @jax.jit
+    def epoch_step(xs, a_m, b_m):
+        def one(x, lr, l2):
+            return sgd_ref.sgd_ref(a_m, b_m, x, lr=lr, l2=l2,
+                                   minibatch=minibatch, epochs=1, kind=kind)
+        return jax.vmap(one)(xs, lrs, l2s)
+
+    @jax.jit
+    def loss_step(acc, a_m, b_m, xs):
+        def rowsum(x):
+            z = a_m @ x
+            if kind == "logreg":
+                p = jax.nn.sigmoid(z)
+                eps = 1e-7
+                j = -(b_m * jnp.log(p + eps)
+                      + (1 - b_m) * jnp.log(1 - p + eps))
+            else:
+                j = 0.5 * jnp.square(z - b_m)
+            return jnp.sum(j)
+        return acc + jax.vmap(rowsum)(xs)
+
+    for _ in range(epochs):
+        for i in range(spec.n_morsels):
+            a_m, b_m = morsel_arrays(i)
+            xs = epoch_step(xs, a_m, b_m)
+    acc = jnp.zeros((k,), jnp.float32)
+    for i in range(spec.n_morsels):
+        a_m, b_m = morsel_arrays(i)
+        acc = loss_step(acc, a_m, b_m, xs)
+    losses = acc / m + l2s * jnp.sum(jnp.square(xs), axis=1)
+    return xs, losses

@@ -2,18 +2,52 @@
 
 Tables are dicts of device-resident int32/float32 columns; placement per
 column follows a ChannelPlan (the paper's data-partitioning decision).
-Intermediate results materialize eagerly, like MonetDB's BAT algebra.
+Intermediate results materialize eagerly, like MonetDB's BAT algebra —
+except for the morsel views below, which cut columns into partition-
+granular slices for the streaming execution path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Optional
+from typing import Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.channels import ChannelPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class MorselSpec:
+    """Partition-granular slicing of a column set: ``rows`` per morsel,
+    aligned to a ChannelPlan's engine count so a placed morsel maps one
+    shard per pseudo-channel.  The last morsel may be ragged; its view is
+    zero-padded to ``rows`` and carries the valid count."""
+
+    total_rows: int
+    rows: int
+
+    def __post_init__(self):
+        assert self.rows > 0 and self.total_rows >= 0
+
+    @property
+    def n_morsels(self) -> int:
+        return max(-(-self.total_rows // self.rows), 1)
+
+    def bounds(self, i: int) -> Tuple[int, int]:
+        start = i * self.rows
+        return start, min(start + self.rows, self.total_rows)
+
+    @staticmethod
+    def for_plan(total_rows: int, target_rows: int,
+                 plan: ChannelPlan) -> "MorselSpec":
+        """Morsels sized by the channel plan: target rounded up so each
+        morsel shards evenly across the plan's engines, capped at (aligned)
+        table size so a small table is a single morsel."""
+        rows = plan.align_morsel_rows(min(max(target_rows, 1),
+                                          max(total_rows, 1)))
+        return MorselSpec(total_rows, rows)
 
 
 @dataclasses.dataclass
@@ -48,6 +82,32 @@ class Table:
         cols = {k: Column(plan.place(c.data), k)
                 for k, c in self.columns.items()}
         return Table(self.name, cols, plan)
+
+    # -- morsel views (streaming execution path) ---------------------------- #
+
+    def morsel(self, spec: MorselSpec, i: int,
+               columns: Optional[Sequence[str]] = None,
+               ) -> Tuple[dict, int]:
+        """Morsel ``i`` of the named columns as a dict of ``spec.rows``-sized
+        arrays plus the valid row count.  The last morsel is zero-padded;
+        consumers mask rows ``>= n_valid`` (streaming operators fold this
+        into their selection mask), so the pad value never matters."""
+        start, stop = spec.bounds(i)
+        n_valid = stop - start
+        out = {}
+        for c in (columns if columns is not None else tuple(self.columns)):
+            d = self.columns[c].data[start:stop]
+            if n_valid < spec.rows:
+                d = jnp.concatenate(
+                    [d, jnp.zeros((spec.rows - n_valid,), d.dtype)])
+            out[c] = d
+        return out, n_valid
+
+    def morsels(self, spec: MorselSpec,
+                columns: Optional[Sequence[str]] = None):
+        """Iterate every morsel view in table order."""
+        for i in range(spec.n_morsels):
+            yield self.morsel(spec, i, columns)
 
     @staticmethod
     def from_arrays(name: str, arrays: Mapping[str, np.ndarray]) -> "Table":

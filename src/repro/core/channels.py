@@ -91,6 +91,14 @@ class ChannelPlan:
         return tpu_bandwidth_model(self.n_engines,
                                    self.placement == "partitioned")
 
+    def align_morsel_rows(self, rows: int) -> int:
+        """Round a morsel row count up to a multiple of the engine count so
+        every morsel splits evenly into per-channel shards (one shard per
+        pseudo-channel — the paper's `S x 1MiB x (id-1)` offsets applied at
+        morsel rather than whole-column granularity)."""
+        n = self.n_engines
+        return max(-(-int(rows) // n) * n, n)
+
 
 def plan(mesh: Mesh, axis: str = "data",
          placement: Placement = "partitioned") -> ChannelPlan:

@@ -16,13 +16,16 @@ from repro.query.logical import (                                # noqa: F401
 )
 from repro.query.cost import (                                   # noqa: F401
     ColumnStats, CostModel, PhysNode, TableStats, column_placements,
-    estimate_rows, plan_physical,
+    estimate_rows, join_orientation_cost, load_calibration, plan_physical,
 )
 from repro.query.optimize import (                               # noqa: F401
     choose_build_side, fuse_filter_project, optimize, prune_columns,
     push_down_filters,
 )
+from repro.query.pipeline import (                               # noqa: F401
+    BreakerSpec, CompiledPipeline, StreamPlan, analyze,
+)
 from repro.query.exec import (                                   # noqa: F401
-    Catalog, Executor, Result, sql_like_query,
+    Catalog, Executor, PlacementCapacityError, Result, sql_like_query,
 )
 from repro.query.serve import QueryRecord, QueryServer           # noqa: F401

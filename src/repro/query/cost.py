@@ -14,6 +14,9 @@ pre-``place()`` tables.
 from __future__ import annotations
 
 import dataclasses
+import json
+import math
+import os
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -28,11 +31,43 @@ from repro.query import logical as L
 BYTES_PER_VALUE = 4                 # int32/float32 columns
 
 # streaming efficiencies + fixed launch overheads (sec) per operator —
-# the crossover that makes the xla/pallas choice size-dependent
+# the crossover that makes the xla/pallas choice size-dependent.  These
+# are the DEFAULTS; measured per-backend numbers from
+# benchmarks/run.py (BENCH_calibration.json) override them per model
+# instance (``load_calibration`` / CostModel(calibration=...)).
 XLA_STREAM_EFF = 0.70
 PALLAS_STREAM_EFF = 0.92
 XLA_CALL_OVERHEAD = 2e-6
 PALLAS_CALL_OVERHEAD = 12e-6
+
+# host->device staging bandwidth for per-morsel placement transfers (the
+# double-buffered jax.device_put the streaming executor overlaps with
+# compute); PCIe-gen4-x16-class default, recalibrated alongside the
+# stream efficiencies
+H2D_GBPS = 16.0
+
+CALIBRATION_FILE = "BENCH_calibration.json"
+
+
+def load_calibration(path: Optional[str] = None) -> Optional[dict]:
+    """Measured per-backend stream efficiencies / call overheads emitted by
+    ``benchmarks/run.py``.  Returns None (fixed constants apply) when the
+    file is absent or unreadable — calibration is an overlay, never a
+    requirement.  The ``REPRO_CALIBRATION`` env var overrides the default
+    CWD lookup: a path loads that file, ``off``/``0`` disables the
+    overlay entirely (so plan decisions never silently depend on what a
+    benchmark run left in the working directory)."""
+    if path is None:
+        env = os.environ.get("REPRO_CALIBRATION", "")
+        if env.lower() in ("off", "0", "none"):
+            return None
+        path = env or os.path.join(os.getcwd(), CALIBRATION_FILE)
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return None
+    return data if isinstance(data, dict) and "backends" in data else None
 
 
 # --------------------------------------------------------------------------- #
@@ -76,10 +111,19 @@ def estimate_rows(node: L.Node, stats: Dict[str, TableStats]) -> float:
         l = estimate_rows(node.left, stats)
         r = estimate_rows(node.right, stats)
         cs = _column_stats(node.right, node.on, stats)
+        ls = _column_stats(node.left, node.on, stats)
         # expected matches per probe row ~ |build| / |key domain|: exceeds
-        # 1 when the build side carries duplicates (multi-match output)
+        # 1 when the build side carries duplicates (multi-match output).
+        # Only probe rows whose key lands in the build domain can match —
+        # without the overlap fraction the estimate depends on which side
+        # probes, and the build-side chooser compares orientations
         matches = r / cs.domain if cs else 0.1
-        return l * matches
+        if cs and ls:
+            overlap = min(cs.hi, ls.hi) - max(cs.lo, ls.lo) + 1
+            frac = min(max(overlap, 0) / ls.domain, 1.0)
+        else:
+            frac = 1.0
+        return l * matches * frac
     if isinstance(node, L.Project):
         return estimate_rows(node.child, stats)
     if isinstance(node, (L.Aggregate, L.TrainGLM)):
@@ -145,13 +189,41 @@ class CostModel:
     """
 
     def __init__(self, n_engines: int, *, hardware: str = "tpu",
-                 allow_pallas: Optional[bool] = None):
+                 allow_pallas: Optional[bool] = None,
+                 calibration: Optional[dict] = None):
         self.n_engines = n_engines
         self.hardware = hardware
         if allow_pallas is None:
             # interpret-mode pallas on CPU is emulation, never a win
             allow_pallas = jax.default_backend() == "tpu"
         self.allow_pallas = allow_pallas
+        self.stream_eff = {"xla": XLA_STREAM_EFF,
+                           "pallas": PALLAS_STREAM_EFF}
+        self.call_overhead = {"xla": XLA_CALL_OVERHEAD,
+                              "pallas": PALLAS_CALL_OVERHEAD}
+        self.h2d_gbps = H2D_GBPS
+        self.calibrated_from = None
+        if calibration:
+            self._apply_calibration(calibration)
+
+    def _apply_calibration(self, calibration: dict) -> None:
+        """Overlay measured per-backend numbers on the fixed constants.
+        Efficiencies are clamped to (0, 1]; missing backends keep their
+        defaults, so a partial calibration (e.g. no pallas off-TPU) is
+        fine."""
+        for impl, meas in calibration.get("backends", {}).items():
+            if impl not in self.stream_eff:
+                continue
+            eff = meas.get("stream_eff")
+            if eff and eff > 0:
+                self.stream_eff[impl] = min(float(eff), 1.0)
+            over = meas.get("call_overhead_s")
+            if over and over > 0:
+                self.call_overhead[impl] = float(over)
+        h2d = calibration.get("h2d_gbps")
+        if h2d and h2d > 0:
+            self.h2d_gbps = float(h2d)
+        self.calibrated_from = calibration.get("backend", "measured")
 
     def impls(self) -> Tuple[str, ...]:
         return ("xla", "pallas") if self.allow_pallas else ("xla",)
@@ -173,8 +245,8 @@ class CostModel:
                     n_passes: int = 1, flops: float = 0.0) -> float:
         """Seconds to stream ``n_bytes`` under (impl, placement), roofline-
         combined with any compute the operator does."""
-        eff = PALLAS_STREAM_EFF if impl == "pallas" else XLA_STREAM_EFF
-        over = PALLAS_CALL_OVERHEAD if impl == "pallas" else XLA_CALL_OVERHEAD
+        eff = self.stream_eff.get(impl, XLA_STREAM_EFF)
+        over = self.call_overhead.get(impl, XLA_CALL_OVERHEAD)
         bw = self.bandwidth_gbps(placement) * 1e9 * eff
         t_mem = n_passes * n_bytes / bw
         t_compute = flops / PEAK_FLOPS
@@ -185,6 +257,54 @@ class CostModel:
         if self.n_engines <= 1:
             return 0.0
         return n_bytes * (self.n_engines - 1) / ICI_BW
+
+    # -- morsel pricing (streaming pipeline) -------------------------------- #
+
+    def morsel_cost(self, total_rows: float, morsel_rows: int, n_cols: int,
+                    *, impl: str = "xla", placement: str = "partitioned",
+                    flops_per_row: float = 0.0,
+                    include_transfer: bool = True) -> float:
+        """Seconds to stream ``total_rows`` in double-buffered morsels: the
+        next morsel's placement transfer (H2D at ``h2d_gbps``) overlaps the
+        current morsel's compute, so steady state pays max(transfer,
+        compute) per morsel and the pipeline ends add the smaller term
+        once.  Per-dispatch overhead rides on the compute term — the
+        pressure toward larger morsels that transfer overlap pushes
+        against.  ``include_transfer=False`` prices the in-memory regime
+        where morsel placements are cached across executions (no H2D per
+        run), which pushes toward large morsels."""
+        n_morsels = max(-(-int(total_rows) // int(morsel_rows)), 1)
+        m_bytes = morsel_rows * BYTES_PER_VALUE * n_cols
+        t_x = m_bytes / (self.h2d_gbps * 1e9) if include_transfer else 0.0
+        t_c = self.stream_cost(m_bytes, impl=impl, placement=placement,
+                               flops=flops_per_row * morsel_rows)
+        return n_morsels * max(t_x, t_c) + min(t_x, t_c)
+
+    def choose_morsel_rows(self, total_rows: float, n_cols: int, *,
+                           impl: str = "xla", align: Optional[int] = None,
+                           flops_per_row: float = 0.0,
+                           include_transfer: bool = True) -> int:
+        """argmin of ``morsel_cost`` over power-of-two candidates, aligned
+        to the engine count so one morsel shards evenly per pseudo-channel.
+        Small morsels drown in dispatch overhead, huge ones serialize the
+        first transfer behind nothing — the sweet spot is plan-dependent,
+        which is why the optimizer prices it per plan."""
+        align = align or self.n_engines
+        total = max(int(total_rows), 1)
+        best_rows, best_cost = None, math.inf
+        candidates = []
+        k = 10                                      # start at 1024-ish rows
+        while (1 << k) * align < total * 2:
+            candidates.append((1 << k) * align)
+            k += 1
+        candidates.append(-(-total // align) * align)   # whole input
+        for rows in candidates:
+            c = self.morsel_cost(total, rows, n_cols, impl=impl,
+                                 flops_per_row=flops_per_row,
+                                 include_transfer=include_transfer)
+            if c < best_cost:
+                best_rows, best_cost = rows, c
+        return best_rows
 
 
 # --------------------------------------------------------------------------- #
@@ -203,15 +323,18 @@ class PhysNode:
     gbps: float
     alternatives: Dict[str, float]
     children: Tuple["PhysNode", ...] = ()
+    morsel_rows: Optional[int] = None     # streaming pipeline granularity
 
     @property
     def total_cost_s(self) -> float:
         return self.cost_s + sum(c.total_cost_s for c in self.children)
 
     def describe(self) -> str:
+        morsel = f" morsel={self.morsel_rows}" if self.morsel_rows else ""
         return (f"impl={self.impl} placement={self.placement} "
                 f"passes={self.n_passes} est_rows={self.est_rows_out:.0f} "
-                f"cost={self.cost_s * 1e6:.1f}us bw={self.gbps:.0f}GB/s")
+                f"cost={self.cost_s * 1e6:.1f}us bw={self.gbps:.0f}GB/s"
+                f"{morsel}")
 
 
 def _choose(model: CostModel, n_bytes: float, placements: Tuple[str, ...],
@@ -244,7 +367,12 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
                                              for t, s in stats.items()}))
         n_bytes = stats[node.table].num_rows * BYTES_PER_VALUE * n_cols
         if role == "build":
-            cost = model.broadcast_cost(n_bytes)
+            # replication is not free even on one engine: the source
+            # column is read once (its channel's stream) before the
+            # inter-engine broadcast — omitting this made the optimizer
+            # hide a large build side's entire scan behind role="build"
+            cost = model.broadcast_cost(n_bytes) + model.stream_cost(
+                n_bytes, impl="xla", placement="replicated")
             return PhysNode("scan", node, "xla", "replicated", 1, rows,
                             cost, model.bandwidth_gbps("replicated"),
                             {"xla/replicated": cost})
@@ -276,23 +404,35 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
         n_passes = max(-(-int(build_rows) // HT_CAPACITY), 1)
         unique = key_is_unique(node.right, node.on, stats)
         if unique:
-            # open-addressing fast path: one egress line per probe row
-            n_bytes = probe_rows * BYTES_PER_VALUE
+            # open-addressing fast path: one egress line per probe row,
+            # plus the one-time hash-table build over the build rows
+            # (written once across all passes, so divided back out)
+            n_bytes = (probe_rows * BYTES_PER_VALUE
+                       + build_rows * BYTES_PER_VALUE / n_passes)
             op = "join"
         else:
             # multi-match probe: per-row work scales with the expected
             # duplicate-chain length, and the variable-cardinality pair
             # list (l_idx, s_idx) is materialized output.  Only the probe
-            # stream is rescanned per pass; the pair list is written once,
-            # so its bytes are divided by n_passes before stream_cost
-            # multiplies everything back up
+            # stream is rescanned per pass; the pair list and the sorted-
+            # bucket build (an O(n log n) sort of the build rows) are paid
+            # once, so their bytes are divided by n_passes before
+            # stream_cost multiplies everything back up
             chain = expected_chain_length(node.right, node.on, stats)
             out_pairs = rows
+            sort_bytes = build_rows * BYTES_PER_VALUE * max(
+                math.log2(max(build_rows, 2.0)), 1.0)
             n_bytes = (probe_rows * BYTES_PER_VALUE * max(chain, 1.0)
-                       + 2 * out_pairs * BYTES_PER_VALUE / n_passes)
+                       + (2 * out_pairs * BYTES_PER_VALUE + sort_bytes)
+                       / n_passes)
             op = "join_multi"
-        impl, pl, cost, alts = _choose(model, n_bytes,
-                                       ("partitioned", "congested"),
+        # the probe runs wherever the probe stream already lives (fused /
+        # streamed probes read the scan's placement; the build side is
+        # replicated by construction) — pricing an independent join
+        # placement would optimize a decision execution never consults
+        probe_pl = left.placement if left.placement != "replicated" \
+            else "partitioned"
+        impl, pl, cost, alts = _choose(model, n_bytes, (probe_pl,),
                                        n_passes=n_passes)
         return PhysNode(op, node, impl, pl, n_passes, rows, cost,
                         model.bandwidth_gbps(pl), alts, (left, right))
@@ -309,8 +449,18 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
         in_rows = estimate_rows(node.child, stats)
         n_bytes = in_rows * BYTES_PER_VALUE
         impl, pl, cost, alts = _choose(model, n_bytes, ("partitioned",))
+        # streaming granularity for the whole pipeline this aggregate
+        # roots: priced on the probe-spine base scan (the stream source)
+        base = probe_base_scan(node.child)
+        morsel_rows = None
+        if base is not None and base.table in stats:
+            n_cols = len(base.columns) if base.columns is not None \
+                else len(stats[base.table].columns)
+            morsel_rows = model.choose_morsel_rows(
+                stats[base.table].num_rows, max(n_cols, 1), impl=impl)
         return PhysNode("aggregate", node, impl, pl, 1, 1.0, cost,
-                        model.bandwidth_gbps(pl), alts, (child,))
+                        model.bandwidth_gbps(pl), alts, (child,),
+                        morsel_rows=morsel_rows)
 
     if isinstance(node, L.TrainGLM):
         child = plan_physical(node.child, stats, model, role="build")
@@ -336,6 +486,33 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
                         alts[best], model.bandwidth_gbps(pl), alts, (child,))
 
     raise TypeError(node)
+
+
+def probe_base_scan(node: L.Node) -> Optional[L.Scan]:
+    """The Scan feeding a pipeline's probe spine — the stream source the
+    morsel driver cuts into partition-granular slices.  Follows probe-side
+    children (Join.left) down to the leaf."""
+    while not isinstance(node, L.Scan):
+        if isinstance(node, (L.Filter, L.FilterProject, L.Project,
+                             L.Aggregate, L.TrainGLM)):
+            node = node.child
+        elif isinstance(node, L.Join):
+            node = node.left
+        else:
+            return None
+    return node
+
+
+def join_orientation_cost(join: L.Join, stats: Dict[str, TableStats],
+                          model: CostModel) -> float:
+    """Total priced cost of one build/probe orientation of ``join`` —
+    includes the build side's replication broadcast, its sort/hash build
+    bytes, the chain-length-scaled probe stream, and multi-pass rescans.
+    ``optimize.choose_build_side`` compares the two orientations with this
+    instead of raw cardinality, so a provably-unique (fusable) build side
+    is no longer swapped away for a marginally smaller duplicate-keyed
+    one."""
+    return plan_physical(join, stats, model).total_cost_s
 
 
 def column_placements(phys: PhysNode) -> Dict[Tuple[str, str], str]:

@@ -1,14 +1,20 @@
 """Physical executor: lowers optimized plans onto the columnar engine.
 
-Two lowering paths:
+Three lowering paths:
 
 * **fused/jitted** — aggregate-rooted select/join pipelines compile to one
-  jitted executable that evaluates filters as masks, probes joins with the
-  distributed hash-join kernel, and reduces without ever materializing
-  compacted intermediates (the selection->gather fusion, end to end).
-  Executables are cached by plan *signature* (structure + shapes + physical
-  decisions, predicate constants masked), so repeated queries — even with
-  different range bounds — reuse one compilation.
+  jitted executable (the degenerate single-morsel pipeline): filters are
+  masks, join probes binary-search cached sorted-bucket builds (exact for
+  duplicate build keys — match counts weight the aggregate, bucket prefix
+  sums serve build-column aggregates), and nothing compacted is ever
+  materialized.  Executables are cached by plan *signature* (structure +
+  shapes + physical decisions, predicate constants masked), so repeated
+  queries — even with different range bounds — reuse one compilation.
+* **streaming** (``mode="stream"``) — the same pipeline driven morsel by
+  morsel (``query/pipeline.py``): join builds and the final aggregate are
+  the pipeline breakers; the next morsel's placement transfer double-
+  buffers against the current morsel's compute.  Streams datasets larger
+  than one placement's capacity, which the other paths cannot touch.
 * **eager** — Project-rooted and TrainGLM plans lower step by step onto
   ``columnar/engine.py`` operators, materializing BAT-style intermediates
   exactly like the hand-written pipelines did.
@@ -27,16 +33,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.columnar import engine
-from repro.columnar.table import Column, Table
-from repro.core import join as join_core
+from repro.columnar.table import Column, MorselSpec, Table
 from repro.core.channels import ChannelPlan, plan as make_plan
 from repro.launch.mesh import make_host_mesh
 from repro.query import logical as L
+from repro.query import pipeline as pl
 from repro.query.cost import (
     ColumnStats, CostModel, PhysNode, TableStats, column_placements,
-    key_is_unique, plan_physical,
+    key_is_unique, load_calibration, plan_physical,
 )
 from repro.query.optimize import optimize
+
+
+class PlacementCapacityError(RuntimeError):
+    """A whole-column placement exceeds the configured per-placement
+    capacity (the paper's 256 MiB pseudo-channel budget).  Eager paths
+    fail here; the morsel-streaming path places one morsel at a time and
+    completes regardless of dataset size."""
 
 
 class Catalog:
@@ -72,6 +85,7 @@ class Result:
     physical: Optional[PhysNode]
     cache_hit: bool
     wall_s: float
+    mode: str = "batch"                 # batch | stream
 
     def explain(self) -> str:
         if self.physical is None:
@@ -90,17 +104,26 @@ class Executor:
     """optimize -> cost -> lower -> run, with a compiled-plan cache."""
 
     def __init__(self, catalog: Catalog, mesh=None, axis: str = "model",
-                 cost_model: Optional[CostModel] = None):
+                 cost_model: Optional[CostModel] = None,
+                 placement_capacity_bytes: Optional[int] = None):
         self.catalog = catalog
         self.mesh = mesh if mesh is not None else make_host_mesh()
         self.axis = axis
         n_eng = self.mesh.shape[axis]
-        self.cost_model = cost_model or CostModel(n_eng)
+        # default model picks up measured per-backend numbers when
+        # benchmarks/run.py has emitted BENCH_calibration.json in the CWD
+        self.cost_model = cost_model or CostModel(
+            n_eng, calibration=load_calibration())
+        self.placement_capacity_bytes = placement_capacity_bytes
         self.plans: Dict[str, ChannelPlan] = {
             p: make_plan(self.mesh, axis, p)
             for p in ("partitioned", "replicated", "congested")}
         self._compiled: Dict[tuple, object] = {}
+        self._planned: Dict[L.Node, tuple] = {}
         self._placed: Dict[Tuple[str, str, str], jax.Array] = {}
+        self._builds: Dict[pl.BreakerSpec, tuple] = {}
+        self._morsels: Dict[tuple, jax.Array] = {}
+        self._morsel_cache_rows: Dict[str, int] = {}
         self.cache_hits = 0
         self.cache_misses = 0
         self.trace_count = 0          # bumped inside traced bodies only
@@ -113,6 +136,15 @@ class Executor:
         key = (table, column, placement)
         if key not in self._placed:
             data = self.catalog.tables[table].column(column)
+            cap = self.placement_capacity_bytes
+            if cap is not None and data.nbytes > cap:
+                raise PlacementCapacityError(
+                    f"column {table}.{column} ({placement}) is "
+                    f"{data.nbytes} bytes, over the {cap}-byte placement "
+                    "capacity.  Only probe-side stream columns can exceed "
+                    "it (mode='stream' places them one morsel at a time); "
+                    "build/replicated columns and eagerly-lowered plans "
+                    "need every placed column to fit one placement")
             self._placed[key] = self.plans[placement].place(data)
         return self._placed[key]
 
@@ -125,76 +157,75 @@ class Executor:
 
     # -- entry points ------------------------------------------------------- #
 
-    def execute(self, q, *, optimized: bool = True) -> Result:
+    def execute(self, q, *, optimized: bool = True, mode: str = "batch",
+                morsel_rows: Optional[int] = None) -> Result:
+        """Run a logical plan.  ``mode="batch"`` is the whole-column path
+        (fused single-morsel pipeline, or eager engine operators);
+        ``mode="stream"`` drives the same pipeline morsel by morsel with
+        double-buffered placement transfers, falling back to batch when
+        the plan has no streamable probe spine."""
         node = q.node if isinstance(q, L.Q) else q
         t0 = time.perf_counter()
-        if optimized:
-            node = optimize(node, self.catalog.stats)
-            phys = plan_physical(node, self.catalog.stats, self.cost_model)
-            value, hit = self._run(node, phys)
-        else:
-            phys = None
-            value, hit = self._run_eager(node, None), False
+        if not optimized:
+            if mode == "stream":
+                raise ValueError(
+                    "mode='stream' lowers through the optimizer's physical "
+                    "plan; it cannot combine with optimized=False")
+            return Result(self._run_eager(node, None), None, False,
+                          time.perf_counter() - t0)
+        node, phys = self.plan(node)
+        if mode == "stream":
+            splan = pl.analyze(node, self.catalog.stats)
+            if splan is not None:
+                value, hit = self._run_stream(node, phys, splan, morsel_rows)
+                return Result(value, phys, hit, time.perf_counter() - t0,
+                              mode="stream")
+        value, hit = self._run(node, phys)
         return Result(value, phys, hit, time.perf_counter() - t0)
+
+    def plan(self, node: L.Node):
+        """optimize + plan_physical, memoized by the (hashable) logical
+        node — hot repeated queries skip replanning entirely (the cost-
+        priced build-side choice runs plan_physical per orientation, so
+        replanning every execution tripled the planning work)."""
+        if node in self._planned:
+            return self._planned[node]
+        opt = optimize(node, self.catalog.stats, self.cost_model)
+        phys = plan_physical(opt, self.catalog.stats, self.cost_model)
+        self._planned[node] = (opt, phys)
+        return opt, phys
 
     def explain(self, q) -> str:
         node = q.node if isinstance(q, L.Q) else q
-        node = optimize(node, self.catalog.stats)
-        phys = plan_physical(node, self.catalog.stats, self.cost_model)
-        return _explain(phys)
+        return _explain(self.plan(node)[1])
 
-    # -- fused/jitted path -------------------------------------------------- #
+    # -- fused/jitted path (single-morsel pipeline) -------------------------- #
 
     def _run(self, node: L.Node, phys: PhysNode):
-        if self._fusable(node):
-            key = self._cache_key(node, phys)
-            if key in self._compiled:
-                self.cache_hits += 1
-                hit = True
-            else:
-                self.cache_misses += 1
-                self._compiled[key] = self._build_fused(node, phys)
-                hit = False
-            fn, specs = self._compiled[key]
-            arrays = [self.placed(t, c, p) for t, c, p in specs]
-            lits = jnp.asarray(L.literals(node), jnp.int32)
-            out = fn(lits, *arrays)
-            return jax.device_get(out).item(), hit
-        return self._run_eager(node, phys), False
-
-    def _fusable(self, node: L.Node) -> bool:
-        """Aggregate-rooted pipelines of scan/filter/join fuse into one
-        executable.  The fused body evaluates joins as one-line-per-probe
-        masks, which is only the full pair multiset when the build key is
-        provably unique — duplicate-keyed build sides (op "join_multi")
-        lower eagerly onto the pair-list engine operator instead.
-        Build-side filters also stay eager for the same one-row-per-key
-        reason."""
-        if not isinstance(node, L.Aggregate):
-            return False
-        ok = True
-
-        def visit(n, side="probe"):
-            nonlocal ok
-            if isinstance(n, L.Scan):
-                return
-            if isinstance(n, (L.Filter, L.FilterProject)) and side == "probe":
-                visit(n.child, side)
-                return
-            if isinstance(n, L.Join) and side == "probe":
-                visit(n.left, "probe")
-                if not isinstance(n.right, L.Scan):
-                    ok = False
-                elif not key_is_unique(n.right, n.on, self.catalog.stats):
-                    ok = False          # multi-match output: pair list, not mask
-                return
-            if isinstance(n, (L.Project, L.Aggregate)):
-                visit(n.child, side)
-                return
-            ok = False
-
-        visit(node.child)
-        return ok
+        """Aggregate-rooted pipelines — including duplicate-keyed build
+        sides, whose pair-list aggregate stays fused: per-probe match
+        counts weight the reduction and bucket prefix sums serve build-
+        column aggregates, so nothing is lowered eagerly — compile to one
+        executable and run it as a single whole-table morsel."""
+        splan = pl.analyze(node, self.catalog.stats)
+        if splan is None:
+            return self._run_eager(node, phys), False
+        key = self._cache_key(node, phys)
+        if key in self._compiled:
+            self.cache_hits += 1
+            hit = True
+        else:
+            self.cache_misses += 1
+            self._compiled[key] = self._compile(node, phys, splan,
+                                                rows=None)
+            hit = False
+        cp, specs = self._compiled[key]
+        arrays = [self.placed(t, c, p) for t, c, p in specs]
+        builds = self._breaker_arrays(splan.breakers)
+        lits = jnp.asarray(L.literals(node), jnp.int32)
+        carry = cp.step(lits, cp.init_carry(), jnp.int32(cp.rows),
+                        *builds, *arrays)
+        return cp.finalize(carry), hit
 
     def _cache_key(self, node: L.Node, phys: PhysNode) -> tuple:
         shapes = tuple(sorted(
@@ -202,101 +233,169 @@ class Executor:
             for t in {n.table for n in L.walk(node)
                       if isinstance(n, L.Scan)}))
         decisions = tuple((p.op, p.impl, p.placement, p.n_passes)
-                          for p in _walk_phys(phys))
+                          for p in _walk_phys(phys)) if phys else ()
         return (L.signature(node), shapes, decisions,
                 self.cost_model.n_engines)
 
-    def _build_fused(self, node: L.Node, phys: PhysNode):
-        """Compile one executable for this plan shape.  Literals (range
-        bounds) are traced scalars: same-shape queries with different
-        constants share the compilation."""
-        specs: list = []       # (table, column, placement) leaf inputs
-        placements = column_placements(phys)
-        # per-logical-node physical decisions (nodes hash structurally;
-        # identical subplans share identical decisions)
-        decisions = {p.logical: p for p in _walk_phys(phys)}
+    def _compile(self, node: L.Node, phys: Optional[PhysNode],
+                 splan: pl.StreamPlan, *, rows: Optional[int]):
+        """Compile a pipeline for this plan shape at one granularity
+        (``rows=None``: the whole base table, the batch path).  Literals
+        (range bounds) are traced scalars: same-shape queries with
+        different constants share the compilation."""
+        placements = column_placements(phys) if phys else {}
 
         def placement_of(table: str, col: str) -> str:
             return placements.get((table, col),
                                   placements.get((table, "*"),
                                                  "partitioned"))
 
-        def collect(n: L.Node):
-            if isinstance(n, L.Scan):
-                for c in n.columns or tuple(
-                        self.catalog.tables[n.table].columns):
-                    spec = (n.table, c, placement_of(n.table, c))
-                    if spec not in specs:
-                        specs.append(spec)
-            for c in n.children():
-                collect(c)
+        specs = tuple((splan.base_scan.table, c,
+                       placement_of(splan.base_scan.table, c))
+                      for c in splan.stream_cols)
+        if rows is None:
+            rows = self.catalog.stats[splan.base_scan.table].num_rows
+        # per-join impl decisions (nodes hash structurally; identical
+        # subplans share identical decisions)
+        decisions = {p.logical: p for p in _walk_phys(phys)} if phys else {}
+        impls = tuple(decisions[j].impl if j in decisions else "xla"
+                      for j in splan.join_nodes)
 
-        collect(node)
-        executor = self
+        def bump():
+            self.trace_count += 1
 
-        def run(lits, *arrays):
-            executor.trace_count += 1      # python side effect: trace marker
-            cols_by_spec = {s: a for s, a in zip(specs, arrays)}
-            lit_pos = [0]
+        cp = pl.compile_pipeline(splan, rows, self._agg_dtype(splan),
+                                 impls=impls, trace_marker=bump)
+        return cp, specs
 
-            def next_lit():
-                v = lits[lit_pos[0]]
-                lit_pos[0] += 1
-                return v
+    def _agg_dtype(self, splan: pl.StreamPlan):
+        name = splan.node.column
+        base = self.catalog.tables[splan.base_scan.table]
+        if name in base.columns:
+            return base.columns[name].dtype
+        for b in splan.breakers:
+            cols = self.catalog.tables[b.table].columns
+            if name in cols:
+                return cols[name].dtype
+        return jnp.int32
 
-            def eval_node(n):
-                """-> (cols: name->array, mask, table_name-of-row-space)"""
-                if isinstance(n, L.Scan):
-                    cols = {c: cols_by_spec[(n.table, c,
-                                             placement_of(n.table, c))]
-                            for c in n.columns or tuple(
-                                executor.catalog.tables[n.table].columns)}
-                    nrows = executor.catalog.stats[n.table].num_rows
-                    return cols, jnp.ones((nrows,), jnp.bool_)
-                if isinstance(n, (L.Filter, L.FilterProject)):
-                    cols, mask = eval_node(n.child)
-                    lo, hi = next_lit(), next_lit()
-                    c = cols[n.column]
-                    mask = mask & (c >= lo) & (c <= hi)
-                    if isinstance(n, L.FilterProject):
-                        cols = {k: cols[k] for k in n.columns}
-                    return cols, mask
-                if isinstance(n, L.Join):
-                    lcols, lmask = eval_node(n.left)
-                    rnode = n.right            # Scan (checked by _fusable)
-                    rcols, _ = eval_node(rnode)
-                    dec = decisions.get(n)
-                    s_idx, _ = join_core.join_distributed(
-                        rcols[n.on], lcols[n.on],
-                        executor.plans[dec.placement if dec else
-                                       "partitioned"],
-                        impl=dec.impl if dec else "xla")
-                    mask = lmask & (s_idx >= 0)
-                    safe = jnp.clip(s_idx, 0, None)
-                    out = dict(lcols)
-                    for name, arr in rcols.items():
-                        if name not in out:
-                            out[name] = jnp.take(arr, safe, axis=0)
-                    return out, mask
-                if isinstance(n, L.Project):
-                    cols, mask = eval_node(n.child)
-                    return {k: cols[k] for k in n.columns}, mask
-                raise TypeError(n)
+    def _breaker_arrays(self, breakers) -> list:
+        """Flattened, cached join-build state (the pipeline breakers).
+        Build columns replicate through ``placed()`` — the same per-column
+        decision surface (and capacity gate) as every other placement."""
+        flat: list = []
+        for b in breakers:
+            if b not in self._builds:
+                cols = {b.on: Column(self.placed(b.table, b.on,
+                                                 "replicated"), b.on)}
+                for c in b.value_cols:
+                    cols[c] = Column(self.placed(b.table, c, "replicated"),
+                                     c)
+                build = engine.join_build(Table(b.table, cols), b.on,
+                                          b.value_cols, unique=b.unique)
+                self._builds[b] = build.flat()
+            flat.extend(self._builds[b])
+        return flat
 
-            assert isinstance(node, L.Aggregate)
-            cols, mask = eval_node(node.child)
-            col = cols[node.column]
-            if node.op == "sum":
-                return jnp.sum(jnp.where(mask, col, 0))
-            if node.op == "count":
-                return jnp.sum(mask.astype(jnp.int32))
-            if node.op == "mean":
-                s = jnp.sum(jnp.where(mask, col, 0).astype(jnp.float32))
-                c = jnp.sum(mask.astype(jnp.float32))
-                return s / jnp.maximum(c, 1.0)
-            raise ValueError(node.op)
+    # -- streaming path (morsel-driven pipeline) ----------------------------- #
 
-        return jax.jit(run), tuple(specs)
+    def _run_stream(self, node: L.Node, phys: PhysNode,
+                    splan: pl.StreamPlan, morsel_rows: Optional[int]):
+        """Drive the pipeline morsel by morsel.  The cost model priced the
+        morsel granularity onto the physical root; the driver double-
+        buffers morsel ``i+1``'s placement transfer against morsel ``i``'s
+        compute.  With a placement capacity set, morsels are never cached
+        (out-of-core streaming); without one, placed morsels are reused
+        across executions exactly like whole-column placements."""
+        table = splan.base_scan.table
+        # the phys annotation prices the out-of-core posture (H2D per
+        # morsel); with no capacity limit morsels are cached across
+        # executions, so the spec re-chooses without the transfer term
+        target = morsel_rows or (
+            phys.morsel_rows
+            if phys and self.placement_capacity_bytes is not None else None)
+        spec = self.morsel_spec(table, target,
+                                n_cols=len(splan.stream_cols))
+        cp, builds, hit = self.stream_pipeline(node, phys, splan, spec)
+        cache_ok = self.placement_capacity_bytes is None
+        lits = jnp.asarray(L.literals(node), jnp.int32)
+        get = lambda i: self._stream_morsel(table, cp.stream_cols,   # noqa: E731
+                                            spec, i, cache_ok)
+        carry = pl.drive(cp, spec.n_morsels, get, builds, lits)
+        return cp.finalize(carry), hit
+
+    def morsel_spec(self, table: str, target: Optional[int] = None,
+                    n_cols: int = 2) -> MorselSpec:
+        """Morsel granularity for a stream over ``table``: the cost
+        model's per-plan choice (or an explicit override), aligned by the
+        partitioned channel plan.  ``n_cols`` sizes the per-morsel
+        transfer when the model has to choose."""
+        total = self.catalog.stats[table].num_rows
+        if target is None:
+            target = self.cost_model.choose_morsel_rows(
+                total, max(n_cols, 1),
+                include_transfer=self.placement_capacity_bytes is not None)
+        return MorselSpec.for_plan(total, target, self.plans["partitioned"])
+
+    def stream_pipeline(self, node: L.Node, phys: Optional[PhysNode],
+                        splan: pl.StreamPlan, spec: MorselSpec):
+        """Compiled per-morsel step + breaker arrays for one plan at one
+        granularity — shared with external drivers (the serving front-
+        end's cooperative morsel streams).  Enforces the placement
+        capacity at morsel granularity."""
+        key = ("stream", spec.rows) + self._cache_key(node, phys)
+        if key in self._compiled:
+            self.cache_hits += 1
+            hit = True
+        else:
+            self.cache_misses += 1
+            self._compiled[key] = self._compile(node, phys, splan,
+                                                rows=spec.rows)
+            hit = False
+        cp, _ = self._compiled[key]
+        builds = self._breaker_arrays(splan.breakers)
+        cap = self.placement_capacity_bytes
+        if cap is not None:
+            m_bytes = spec.rows * 4 * len(cp.stream_cols)
+            if m_bytes > cap:
+                raise PlacementCapacityError(
+                    f"one morsel ({m_bytes} bytes) exceeds the placement "
+                    f"capacity {cap}: lower morsel_rows")
+        return cp, builds, hit
+
+    def _stream_morsel(self, table: str, cols: Tuple[str, ...],
+                       spec: MorselSpec, i: int, cache_ok: bool):
+        """One morsel's columns, placed partitioned (each morsel shards one
+        slice per pseudo-channel).  ``device_put`` is dispatched here, so
+        calling this for morsel ``i+1`` before stepping morsel ``i``
+        overlaps the transfer with compute.  Cached PER COLUMN, so
+        overlapping column sets (the serving streams' shifting unions)
+        share one placement per column slice."""
+        start, stop = spec.bounds(i)
+        sh = self.plans["partitioned"].sharding()
+        arrays = []
+        # ONE cached granularity per table (first comer wins): other
+        # sizes bypass the cache instead of pinning a full extra device
+        # copy per size — or thrash-evicting each other when two drivers
+        # alternate granularities against the same table
+        canonical = self._morsel_cache_rows.setdefault(table, spec.rows) \
+            if cache_ok else None
+        cache_ok = cache_ok and canonical == spec.rows
+        missing = [c for c in cols
+                   if not (cache_ok
+                           and (table, c, spec.rows, i) in self._morsels)]
+        data = self.catalog.tables[table].morsel(spec, i, missing)[0] \
+            if missing else {}
+        for c in cols:
+            key = (table, c, spec.rows, i)
+            if c in data:
+                arr = jax.device_put(data[c], sh)
+                if cache_ok:
+                    self._morsels[key] = arr
+            else:
+                arr = self._morsels[key]
+            arrays.append(arr)
+        return tuple(arrays), jnp.int32(stop - start)
 
     # -- eager path (engine.* operators, BAT-style intermediates) ----------- #
 
@@ -399,6 +498,9 @@ class Executor:
             "plan_cache_hit_rate": self.cache_hits / total if total else 0.0,
             "trace_count": self.trace_count,
             "placed_columns": len(self._placed),
+            "cached_builds": len(self._builds),
+            "cached_morsels": len(self._morsels),
+            "cost_model_calibrated_from": self.cost_model.calibrated_from,
         }
 
 

@@ -105,18 +105,30 @@ def prune_columns(node: L.Node, stats: Dict[str, TableStats],
 # --------------------------------------------------------------------------- #
 # rule 3: build side selection
 
-def choose_build_side(node: L.Node, stats: Dict[str, TableStats]) -> L.Node:
-    """Smaller side builds, purely by estimated cardinality: fewer
-    HT_CAPACITY passes, smaller replication broadcast.  Duplicate-keyed
-    build sides are fine — the multi-match sorted-bucket kernel emits the
-    exact pair multiset either way, so uniqueness no longer vetoes the
-    swap (it only selects the physical fast path downstream)."""
+def choose_build_side(node: L.Node, stats: Dict[str, TableStats],
+                      model=None) -> L.Node:
+    """Pick each join's build side.  Without a cost model, the smaller
+    estimated side builds (fewer HT_CAPACITY passes, smaller replication
+    broadcast).  With one, both orientations are priced end to end —
+    build sort/hash bytes, broadcast, chain-length-scaled probe stream,
+    multi-pass rescans — so a provably-unique (fusable) build side is not
+    swapped away for a marginally smaller duplicate-keyed one whose
+    multi-match probe would cost more than it saves.  Duplicate-keyed
+    build sides remain legal either way — the multi-match sorted-bucket
+    kernel emits the exact pair multiset; uniqueness only selects the
+    physical fast path downstream."""
+    from repro.query.cost import join_orientation_cost
+
     def visit(n: L.Node) -> L.Node:
         n = _rewrite_children(n, visit)
-        if isinstance(n, L.Join) and \
-                estimate_rows(n.left, stats) < estimate_rows(n.right, stats):
-            return L.Join(n.right, n.left, n.on)
-        return n
+        if not isinstance(n, L.Join):
+            return n
+        swapped = L.Join(n.right, n.left, n.on)
+        if model is None:
+            return swapped if estimate_rows(n.left, stats) \
+                < estimate_rows(n.right, stats) else n
+        return swapped if join_orientation_cost(swapped, stats, model) \
+            < join_orientation_cost(n, stats, model) else n
 
     return visit(node)
 
@@ -135,9 +147,10 @@ def fuse_filter_project(node: L.Node) -> L.Node:
     return visit(node)
 
 
-def optimize(node: L.Node, stats: Dict[str, TableStats]) -> L.Node:
+def optimize(node: L.Node, stats: Dict[str, TableStats],
+             model=None) -> L.Node:
     node = push_down_filters(node, stats)
-    node = choose_build_side(node, stats)
+    node = choose_build_side(node, stats, model)
     node = prune_columns(node, stats)
     node = fuse_filter_project(node)
     return node

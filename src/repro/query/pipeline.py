@@ -1,0 +1,318 @@
+"""Morsel-driven streaming pipelines — the paper's §V lesson end to end.
+
+The eager executor materializes whole-column intermediates between
+operators (BAT algebra).  This module compiles an aggregate-rooted
+physical plan into a *pipeline*: the probe spine (scan -> filters ->
+join probes -> aggregate) becomes ONE jitted per-morsel step function
+with a small carry, and the plan's pipeline breakers — join builds, the
+final aggregate — are the only points where state wider than a morsel
+exists.  The driver streams partition-granular morsels
+(``columnar.table.MorselSpec``, sized by the cost model, aligned to the
+channel plan) and double-buffers the next morsel's placement transfer
+(``jax.device_put``) against the current morsel's compute, so sustained
+throughput comes from many channel-aligned streams rather than one
+monolithic scan — and datasets larger than a single placement complete,
+which the eager path cannot do at all.
+
+Layout of a compiled step's arguments::
+
+    step(lits, carry, n_valid, *build_flat, *morsel_cols) -> carry
+
+``build_flat`` is the deterministic flattening of every breaker's
+``engine.JoinBuild`` (sorted keys, order, then value/csum arrays);
+``morsel_cols`` are the base scan's columns for one morsel, padded to
+``rows`` with rows ``>= n_valid`` masked out.  Join probes binary-search
+the sorted-bucket build (exact for duplicate keys: per-row match counts
+multiply into a running *weight*, and build-column aggregates read
+bucket prefix sums), so the streamed pair multiset matches the eager
+pair-list operator bit for bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.columnar import engine
+from repro.kernels.join import ref as join_ref
+from repro.query import logical as L
+from repro.query.cost import TableStats, key_is_unique
+
+
+@dataclasses.dataclass(frozen=True)
+class BreakerSpec:
+    """One pipeline breaker: a join build consumed whole before the probe
+    stream starts.  ``value_cols`` are the build columns the plan reads
+    above the join (sorted for a deterministic flat layout)."""
+    table: str
+    on: str
+    value_cols: Tuple[str, ...]
+    unique: bool
+
+    @property
+    def n_arrays(self) -> int:
+        return 2 + len(self.value_cols)
+
+
+@dataclasses.dataclass
+class StreamPlan:
+    """Analysis product: the probe spine's stream source and breakers.
+    ``join_nodes`` parallels ``breakers`` so the compiler can look up each
+    join's physical decisions (impl) on the annotated plan."""
+    node: L.Aggregate
+    base_scan: L.Scan
+    stream_cols: Tuple[str, ...]
+    breakers: Tuple[BreakerSpec, ...]
+    join_nodes: Tuple[L.Join, ...] = ()
+
+
+def analyze(node: L.Node, stats: Dict[str, TableStats]
+            ) -> Optional[StreamPlan]:
+    """Whether a plan lowers onto a morsel pipeline, and its shape if so.
+
+    Streamable plans are aggregate-rooted probe spines: Scan ->
+    (Filter|FilterProject|Project)* with Joins whose build side is a
+    Scan.  Duplicate-keyed build sides are fine (bucket-weighted
+    aggregation) as long as their non-key columns are only read by the
+    final aggregate — a filter or join key above that reads a
+    multi-match column would need the materialized pair list, which is
+    exactly what a pipeline breaker avoids.
+    """
+    if not isinstance(node, L.Aggregate):
+        return None
+    table_columns = {t: s.columns for t, s in stats.items()}
+    breakers = []
+    join_nodes = []
+    dup_contributed = set()
+    refs_above: list = []               # filter/join-key columns, root-down
+    base_scan: list = [None]
+    ok = [True]
+
+    def visit(n: L.Node):
+        if not ok[0]:
+            return
+        if isinstance(n, L.Scan):
+            base_scan[0] = n
+            return
+        if isinstance(n, (L.Filter, L.FilterProject)):
+            refs_above.append(n.column)
+            visit(n.child)
+            return
+        if isinstance(n, L.Project):
+            visit(n.child)
+            return
+        if isinstance(n, L.Join):
+            if not isinstance(n.right, L.Scan) or \
+                    n.right.table not in stats:
+                ok[0] = False
+                return
+            refs_above.append(n.on)
+            visit(n.left)               # post-order: breakers in eval order
+            if not ok[0]:
+                return
+            lcols = set(L.output_columns(n.left, table_columns))
+            rcols = L.output_columns(n.right, table_columns)
+            contributed = tuple(sorted(c for c in rcols
+                                       if c not in lcols and c != n.on))
+            unique = key_is_unique(n.right, n.on, stats)
+            if not unique:
+                dup_contributed.update(contributed)
+            breakers.append(BreakerSpec(n.right.table, n.on, contributed,
+                                        unique))
+            join_nodes.append(n)
+            return
+        ok[0] = False
+
+    visit(node.child)
+    if not ok[0] or base_scan[0] is None or base_scan[0].table not in stats:
+        return None
+    # multi-match columns may feed the aggregate, nothing per-row above
+    if dup_contributed & set(refs_above):
+        return None
+    scan = base_scan[0]
+    stream_cols = scan.columns if scan.columns is not None \
+        else tuple(stats[scan.table].columns)
+    return StreamPlan(node, scan, tuple(stream_cols), tuple(breakers),
+                      tuple(join_nodes))
+
+
+@dataclasses.dataclass
+class CompiledPipeline:
+    """One plan shape compiled at one morsel granularity.  ``raw_step`` is
+    the untransformed body — external drivers vmap it over many queries'
+    (lits, carry) pairs to serve a whole group of compatible queries with
+    one dispatch per morsel."""
+    base_table: str
+    stream_cols: Tuple[str, ...]
+    breakers: Tuple[BreakerSpec, ...]
+    rows: int
+    step: Callable
+    raw_step: Callable
+    init_carry: Callable[[], object]
+    finalize: Callable[[object], object]
+
+    @property
+    def n_build_arrays(self) -> int:
+        return sum(b.n_arrays for b in self.breakers)
+
+
+def compile_pipeline(splan: StreamPlan, rows: int, agg_dtype, *,
+                     impls: Tuple[str, ...] = (),
+                     trace_marker: Optional[Callable] = None
+                     ) -> CompiledPipeline:
+    """Lower a streamable plan into one jitted per-morsel step.
+
+    ``rows`` is static (morsels are uniform, the tail zero-padded with
+    ``n_valid`` masking); literals stay traced scalars so range bounds
+    never force a recompile; the carry is donated so every morsel reuses
+    the accumulator's buffer (no growth with stream length).  ``impls``
+    (parallel to the breakers) carries the cost model's per-join impl
+    decision: ``pallas`` probes use the binary-search counts kernel when
+    the morsel shape admits it, everything else the XLA searchsorted.
+    """
+    from repro.kernels.join.join import DEFAULT_BLOCK, probe_counts_pallas
+
+    node = splan.node
+    breakers = splan.breakers
+    probe_impls = tuple(
+        impls[i] if i < len(impls) and impls[i] == "pallas"
+        and rows % DEFAULT_BLOCK == 0 else "xla"
+        for i in range(len(breakers)))
+    agg_is_int = jnp.issubdtype(agg_dtype, jnp.integer)
+    # carry dtypes: 64-bit accumulators when x64 is enabled; under the
+    # default x32 the integer carries are exact up to 2^31 total (and the
+    # mean's f32 partial sums up to 2^24) — the regime every test and the
+    # batch path share, which is what makes streamed results bit-identical
+    x64 = jax.config.read("jax_enable_x64")
+    int_acc = jnp.int64 if x64 else jnp.int32
+    f_acc = jnp.float64 if x64 else jnp.float32
+
+    if node.op == "sum":
+        acc_dtype = int_acc if agg_is_int else f_acc
+        init = lambda: jnp.zeros((), acc_dtype)            # noqa: E731
+        fin = (lambda c: int(jax.device_get(c))) if agg_is_int \
+            else (lambda c: float(jax.device_get(c)))
+    elif node.op == "count":
+        init = lambda: jnp.zeros((), int_acc)              # noqa: E731
+        fin = lambda c: int(jax.device_get(c))             # noqa: E731
+    elif node.op == "mean":
+        init = lambda: (jnp.zeros((), f_acc),              # noqa: E731
+                        jnp.zeros((), f_acc))
+        fin = lambda c: float(jax.device_get(               # noqa: E731
+            c[0] / jnp.maximum(c[1], 1.0)))
+    else:
+        raise ValueError(node.op)
+
+    n_build = sum(b.n_arrays for b in breakers)
+
+    def step(lits, carry, n_valid, *arrays):
+        if trace_marker is not None:
+            trace_marker()                  # python side effect: trace count
+        build_flat = arrays[:n_build]
+        morsel = arrays[n_build:]
+        valid = jnp.arange(rows, dtype=jnp.int32) < n_valid
+        lit_pos = [0]
+        breaker_pos = [0]
+
+        def next_lit():
+            v = lits[lit_pos[0]]
+            lit_pos[0] += 1
+            return v
+
+        def next_breaker():
+            i = breaker_pos[0]
+            breaker_pos[0] += 1
+            off = sum(b.n_arrays for b in breakers[:i])
+            b = breakers[i]
+            s_sorted, order = build_flat[off], build_flat[off + 1]
+            vals = dict(zip(b.value_cols, build_flat[off + 2:off + 2
+                                                     + len(b.value_cols)]))
+            return b, probe_impls[i], s_sorted, order, vals
+
+        def eval_node(n):
+            """-> (cols, mask, weight, buckets): per-row values, the live-
+            row mask, the multi-match multiplicity product, and bucket-sum
+            pairs for duplicate-build columns."""
+            if isinstance(n, L.Scan):
+                cols = dict(zip(splan.stream_cols, morsel))
+                return (cols, valid,
+                        jnp.ones((rows,), jnp.int32), {})
+            if isinstance(n, (L.Filter, L.FilterProject)):
+                cols, mask, weight, buckets = eval_node(n.child)
+                lo, hi = next_lit(), next_lit()
+                mask = engine.select_range_morsel(cols[n.column], lo, hi,
+                                                  mask)
+                if isinstance(n, L.FilterProject):
+                    cols = {k: cols[k] for k in n.columns if k in cols}
+                return cols, mask, weight, buckets
+            if isinstance(n, L.Project):
+                cols, mask, weight, buckets = eval_node(n.child)
+                return ({k: cols[k] for k in n.columns if k in cols},
+                        mask, weight, buckets)
+            if isinstance(n, L.Join):
+                cols, mask, weight, buckets = eval_node(n.left)
+                b, impl, s_sorted, order, vals = next_breaker()
+                keys = cols[n.on]
+                if impl == "pallas":
+                    start, cnt = probe_counts_pallas(s_sorted, keys,
+                                                     interpret=False)
+                else:
+                    start, cnt = join_ref.bucket_probe(s_sorted, keys)
+                mask = mask & (cnt > 0)
+                if b.unique:
+                    safe = jnp.clip(start, 0, s_sorted.shape[0] - 1)
+                    s_idx = order[safe]
+                    for c in b.value_cols:
+                        cols[c] = vals[c][s_idx]
+                else:
+                    weight = weight * cnt
+                    for c in b.value_cols:
+                        buckets[c] = (engine.bucket_sums(vals[c], start,
+                                                         cnt), cnt)
+                return cols, mask, weight, buckets
+            raise TypeError(n)
+
+        cols, mask, weight, buckets = eval_node(node.child)
+        w_live = jnp.where(mask, weight, 0)
+        if node.op == "count":
+            return carry + jnp.sum(w_live.astype(carry.dtype))
+        if node.column in cols:
+            val = cols[node.column]
+            contrib = val * w_live.astype(val.dtype)
+        else:
+            bsum, cnt = buckets[node.column]
+            others = w_live // jnp.maximum(cnt, 1)
+            contrib = bsum * others.astype(bsum.dtype)
+        if node.op == "sum":
+            # cast BEFORE the reduction: the per-morsel sum must run in
+            # the carry's (possibly 64-bit) accumulator dtype
+            return carry + jnp.sum(contrib.astype(carry.dtype))
+        # mean: exact partial sums in the accumulator dtype (int inputs
+        # stay exactly representable, so the result is bit-identical to
+        # the whole-column evaluation)
+        s, c = carry
+        return (s + jnp.sum(contrib.astype(s.dtype)),
+                c + jnp.sum(w_live.astype(c.dtype)))
+
+    donate = (1,) if jax.default_backend() != "cpu" else ()
+    return CompiledPipeline(
+        splan.base_scan.table, splan.stream_cols, breakers, rows,
+        jax.jit(step, donate_argnums=donate), step, init, fin)
+
+
+def drive(cp: CompiledPipeline, n_morsels: int, get_morsel, build_flat,
+          lits, carry=None):
+    """Run the morsel loop with double buffering: morsel ``i+1``'s
+    placement transfer is dispatched (``get_morsel`` issues the async
+    ``jax.device_put``) before morsel ``i``'s step, so H2D staging
+    overlaps compute — the paper's transfer/compute overlap contract."""
+    carry = cp.init_carry() if carry is None else carry
+    nxt = get_morsel(0)
+    for i in range(n_morsels):
+        cur_arrays, n_valid = nxt
+        if i + 1 < n_morsels:
+            nxt = get_morsel(i + 1)
+        carry = cp.step(lits, carry, n_valid, *build_flat, *cur_arrays)
+    return carry

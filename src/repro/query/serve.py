@@ -1,17 +1,22 @@
-"""Batched query-serving front-end — the ROADMAP's many-clients path.
+"""Query-serving front-end — the ROADMAP's many-clients path.
 
-Clients ``submit()`` logical plans (thread-safe); ``drain()`` processes the
-pending set as one admission batch:
+Two serving disciplines share one ``submit()`` surface:
 
-  1. **dedup** — structurally identical plans (hashable nodes) execute once
-     and fan the result out;
-  2. **micro-batch** — selection->aggregate queries over the same column
-     that differ only in range bounds stack their (lo, hi) pairs and run as
-     ONE vmapped executable (size-bucketed to powers of two so the compile
-     cache stays small);
-  3. everything else goes through the executor's plan cache individually.
+* **admission batches** (default): ``drain()`` processes the pending set
+  as one batch — dedup of structurally identical plans, micro-batching
+  of compatible selections into ONE vmapped executable, everything else
+  through the executor's plan cache.  No result is visible until the
+  whole batch finishes.
+* **incremental pipeline drain** (``streaming=True``): the server keeps
+  cooperative morsel streams (one per base table).  ``pump()`` admits
+  whatever is pending — new queries join the in-flight stream at the
+  next morsel boundary, sharing its placement transfers — then advances
+  every stream one morsel.  A member completes after one full circle
+  over the table (commutative carries make the start offset irrelevant),
+  so results surface continuously instead of at batch boundaries:
+  latency is admission-to-completion, not admission-batch wall time.
 
-Per-query latency, throughput, dedup/batch counters, and the executor's
+Per-query latency, throughput, dedup/stream counters, and the executor's
 plan-cache hit rate come back from ``stats()``.
 """
 from __future__ import annotations
@@ -25,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.query import logical as L
+from repro.query import pipeline as pl
 from repro.query.exec import Executor
 
 
@@ -34,7 +40,8 @@ class QueryRecord:
     node: L.Node
     result: object = None
     latency_s: float = 0.0
-    path: str = "exec"              # exec | dedup | microbatch
+    path: str = "exec"              # exec | dedup | microbatch | stream
+    t_submit: float = 0.0
 
 
 def _microbatch_key(node: L.Node) -> Optional[tuple]:
@@ -54,11 +61,153 @@ def _next_pow2(n: int) -> int:
     return p
 
 
-class QueryServer:
-    """Accepts many concurrent queries and serves them in admission batches."""
+class _StreamMember:
+    """One query riding a cooperative morsel stream.  ``carry`` is only
+    authoritative while its group is unstacked (dirty); a clean group
+    keeps every member's carry stacked on device between pumps."""
 
-    def __init__(self, executor: Executor):
+    def __init__(self, rec: QueryRecord, lits, remaining: int):
+        self.rec = rec
+        self.lits = lits
+        self.carry = None
+        self.remaining = remaining
+        self.dups: List[QueryRecord] = []
+
+
+class _Group:
+    """Members sharing one compiled pipeline: they differ only in their
+    literal vectors and carries, so every pump runs the whole group as
+    ONE vmapped step over stacked (lits, carry) — micro-batching join
+    pipelines the admission-batch server can only execute one by one.
+    Stacks are rebuilt only when membership changes, never per morsel."""
+
+    def __init__(self, cp, builds):
+        self.cp = cp
+        self.builds = builds
+        self.members: List[_StreamMember] = []
+        self.lits = None                  # stacked, padded to size bucket
+        self.carry = None
+        self.size = 0
+
+    def writeback(self):
+        """Unstack the group carry into the members (before membership
+        changes invalidate lane order).  A lone member's live carry is
+        held unstacked in ``self.carry`` and must be copied back too."""
+        if self.carry is not None:
+            if self.size == 1:
+                self.members[0].carry = self.carry
+            else:
+                for i, m in enumerate(self.members):
+                    m.carry = jax.tree_util.tree_map(
+                        lambda x, i=i: x[i], self.carry)
+        self.lits = self.carry = None
+        self.size = 0
+
+    def restack(self):
+        n = len(self.members)
+        self.size = max(_next_pow2(n), 1)
+        pad = [self.members[-1]] * (self.size - n)
+        if self.size == 1:
+            self.lits = self.members[0].lits
+            self.carry = self.members[0].carry
+            return
+        self.lits = jnp.stack([m.lits for m in self.members + pad])
+        self.carry = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[m.carry for m in self.members + pad])
+
+
+class _MorselStream:
+    """Circular shared scan over one base table: members join at the
+    current morsel and complete after one full wrap (aggregate carries
+    commute, so the start offset never changes the result).  All groups
+    of one advance share a single placement transfer of the union of
+    their stream columns."""
+
+    def __init__(self, server: "QueryServer", table: str, spec):
+        self.server = server
+        self.table = table
+        self.spec = spec
+        self.pos = 0
+        self.groups: Dict[int, _Group] = {}
+
+    def members(self):
+        for g in self.groups.values():
+            yield from g.members
+
+    def attach(self, rec: QueryRecord, cp, builds, lits) -> _StreamMember:
+        g = self.groups.get(id(cp))
+        if g is None:
+            g = self.groups[id(cp)] = _Group(cp, builds)
+        g.writeback()
+        m = _StreamMember(rec, lits, self.spec.n_morsels)
+        m.carry = cp.init_carry()
+        g.members.append(m)
+        return m
+
+    def advance(self) -> Dict[int, object]:
+        """Process one morsel for every member — one dispatch per group."""
+        if not any(g.members for g in self.groups.values()):
+            return {}
+        ex = self.server.executor
+        union = tuple(sorted({c for g in self.groups.values() if g.members
+                              for c in g.cp.stream_cols}))
+        cache_ok = ex.placement_capacity_bytes is None
+        arrays, n_valid = ex._stream_morsel(self.table, union, self.spec,
+                                            self.pos, cache_ok)
+        by_col = dict(zip(union, arrays))
+        done: Dict[int, object] = {}
+        for g in self.groups.values():
+            if not g.members:
+                continue
+            if g.carry is None:
+                g.restack()
+            cols = tuple(by_col[c] for c in g.cp.stream_cols)
+            if g.size == 1:
+                g.carry = g.cp.step(g.lits, g.carry, n_valid, *g.builds,
+                                    *cols)
+            else:
+                fn = self.server._vstep(g.cp, g.size)
+                g.carry = fn(g.lits, g.carry, n_valid, *g.builds, *cols)
+            for m in g.members:
+                m.remaining -= 1
+            if any(m.remaining <= 0 for m in g.members):
+                self._complete(g, done)
+        self.pos = (self.pos + 1) % self.spec.n_morsels
+        return done
+
+    def _complete(self, g: _Group, done: Dict[int, object]):
+        g.writeback()
+        now = time.perf_counter()
+        still = []
+        for m in g.members:
+            if m.remaining > 0:
+                still.append(m)
+                continue
+            m.rec.result = g.cp.finalize(m.carry)
+            m.rec.latency_s = now - m.rec.t_submit
+            m.rec.path = "stream"
+            self.server.history.append(m.rec)
+            self.server.n_streamed += 1
+            done[m.rec.qid] = m.rec.result
+            for dup in m.dups:
+                dup.result = m.rec.result
+                dup.latency_s = now - dup.t_submit
+                self.server.history.append(dup)
+                done[dup.qid] = dup.result
+        g.members = still
+
+
+class QueryServer:
+    """Accepts many concurrent queries; serves them in admission batches
+    (default) or as an incremental morsel-pipeline drain
+    (``streaming=True``)."""
+
+    def __init__(self, executor: Executor, *, streaming: bool = False,
+                 morsel_rows: Optional[int] = None):
         self.executor = executor
+        self.streaming = streaming
+        self.morsel_rows = morsel_rows
         self._lock = threading.Lock()
         self._pending: List[QueryRecord] = []
         self._next_qid = 0
@@ -66,10 +215,25 @@ class QueryServer:
         self.n_submitted = 0
         self.n_deduped = 0
         self.n_microbatched = 0
+        self.n_streamed = 0
         self.n_batches = 0
         self._batched_fns: Dict[tuple, object] = {}
         self.batched_cache_hits = 0
         self._total_drain_s = 0.0
+        self._streams: Dict[str, _MorselStream] = {}
+        self._vsteps: Dict[tuple, object] = {}
+
+    def _vstep(self, cp, size: int):
+        """Vmapped per-morsel step for a group of ``size`` compatible
+        members (size-bucketed to powers of two, like the legacy micro-
+        batcher, so the compile cache stays small)."""
+        key = (id(cp), size)
+        if key not in self._vsteps:
+            axes = (0, 0, None) + (None,) * (cp.n_build_arrays
+                                             + len(cp.stream_cols))
+            self._vsteps[key] = jax.jit(jax.vmap(cp.raw_step,
+                                                 in_axes=axes))
+        return self._vsteps[key]
 
     # -- client surface ----------------------------------------------------- #
 
@@ -78,7 +242,8 @@ class QueryServer:
         with self._lock:
             qid = self._next_qid
             self._next_qid += 1
-            self._pending.append(QueryRecord(qid, node))
+            self._pending.append(QueryRecord(qid, node,
+                                             t_submit=time.perf_counter()))
             self.n_submitted += 1
             return qid
 
@@ -87,10 +252,92 @@ class QueryServer:
         qid = self.submit(q)
         return self.drain()[qid]
 
-    # -- serving ------------------------------------------------------------ #
+    # -- incremental pipeline drain (streaming mode) ------------------------- #
+
+    def pump(self) -> Dict[int, object]:
+        """One serving increment: admit everything pending — dedup against
+        in-flight members, attach streamable plans to the table's morsel
+        stream (joining mid-flight), execute the rest now — then advance
+        every stream one morsel.  Returns newly completed results, so
+        callers see completions continuously rather than per admission
+        batch."""
+        with self._lock:
+            batch, self._pending = self._pending, []
+        t0 = time.perf_counter()
+        done: Dict[int, object] = {}
+        ran: Dict[L.Node, QueryRecord] = {}   # non-streamable dedup
+        for rec in batch:
+            src = self._find_inflight(rec.node)
+            if src is not None:
+                rec.path = "dedup"
+                self.n_deduped += 1
+                src.dups.append(rec)
+                continue
+            prior = ran.get(rec.node)
+            if prior is not None:
+                rec.path = "dedup"
+                self.n_deduped += 1
+                rec.result = prior.result
+                rec.latency_s = time.perf_counter() - rec.t_submit
+                self.history.append(rec)
+                done[rec.qid] = rec.result
+                continue
+            if self._try_attach(rec):
+                continue
+            rec.result = self.executor.execute(rec.node).value
+            rec.latency_s = time.perf_counter() - rec.t_submit
+            self.history.append(rec)
+            done[rec.qid] = rec.result
+            ran[rec.node] = rec
+        for stream in self._streams.values():
+            done.update(stream.advance())
+        self._total_drain_s += time.perf_counter() - t0
+        return done
+
+    def _find_inflight(self, node: L.Node) -> Optional[_StreamMember]:
+        for stream in self._streams.values():
+            for m in stream.members():
+                if m.rec.node == node:
+                    return m
+        return None
+
+    def _try_attach(self, rec: QueryRecord) -> bool:
+        ex = self.executor
+        node, phys = ex.plan(rec.node)        # memoized per logical node
+        splan = pl.analyze(node, ex.catalog.stats)
+        if splan is None:
+            return False
+        table = splan.base_scan.table
+        stream = self._streams.get(table)
+        if stream is None:
+            spec = ex.morsel_spec(table, self.morsel_rows
+                                  or phys.morsel_rows,
+                                  n_cols=len(splan.stream_cols))
+            stream = self._streams[table] = _MorselStream(self, table, spec)
+        cp, builds, _ = ex.stream_pipeline(node, phys, splan, stream.spec)
+        lits = jnp.asarray(L.literals(node), jnp.int32)
+        stream.attach(rec, cp, builds, lits)
+        return True
+
+    def _inflight(self) -> bool:
+        return any(g.members for s in self._streams.values()
+                   for g in s.groups.values())
+
+    def _drain_streaming(self) -> Dict[int, object]:
+        out: Dict[int, object] = {}
+        while True:
+            out.update(self.pump())
+            with self._lock:
+                idle = not self._pending
+            if idle and not self._inflight():
+                return out
+
+    # -- serving (admission batches) ----------------------------------------- #
 
     def drain(self) -> Dict[int, object]:
         """Process every pending query; returns qid -> result."""
+        if self.streaming:
+            return self._drain_streaming()
         with self._lock:
             batch, self._pending = self._pending, []
         if not batch:
@@ -184,19 +431,22 @@ class QueryServer:
     # -- reporting ---------------------------------------------------------- #
 
     def stats(self) -> dict:
-        lat = [r.latency_s for r in self.history]
+        lat = sorted(r.latency_s for r in self.history)
         n = len(self.history)
         out = {
             "n_queries": n,
             "n_deduped": self.n_deduped,
             "n_microbatched": self.n_microbatched,
+            "n_streamed": self.n_streamed,
             "n_microbatches": self.n_batches,
             "batched_kernel_cache_hits": self.batched_cache_hits,
             "total_serve_s": self._total_drain_s,
             "queries_per_s": n / self._total_drain_s
             if self._total_drain_s else 0.0,
             "latency_mean_s": sum(lat) / n if n else 0.0,
-            "latency_max_s": max(lat) if lat else 0.0,
+            "latency_p50_s": lat[int(0.50 * (n - 1))] if n else 0.0,
+            "latency_p95_s": lat[int(0.95 * (n - 1))] if n else 0.0,
+            "latency_max_s": lat[-1] if lat else 0.0,
         }
         out.update(self.executor.stats_dict())
         return out
