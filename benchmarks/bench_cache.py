@@ -1,0 +1,212 @@
+"""Semantic-cache benchmark -> BENCH_cache.json.
+
+Measures the acceptance points of the result/subplan caching subsystem
+on a Zipf-repeated analytics workload (the repeated-dashboard shape the
+ROADMAP's many-user north star implies):
+
+  * **hit-rate sweep** — result-cache hit rate vs the Zipf skew of the
+    template distribution (hot templates repeat; the tail stays cold).
+  * **warm vs cold latency, cached vs disabled throughput** — the same
+    workload served three ways: cold cache (admission misses), warm
+    cache (fingerprint hits skip execution), and cache-disabled (the
+    plan/compile cache still applies, so the delta is result reuse, not
+    compilation reuse).  Acceptance: warm >= 3x disabled throughput.
+  * **eviction pressure** — a budget far below the working set must
+    degrade toward recomputation smoothly (correct answers, bounded
+    bytes), not thrash or fail.
+  * **mutation differential** — a base-table mutation mid-workload must
+    produce results bit-identical to cache-disabled execution.
+
+    PYTHONPATH=src python benchmarks/bench_cache.py [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+
+def main(out_path: str = "BENCH_cache.json", *, n_rows: int = 1 << 16,
+         smoke: bool = False) -> dict:
+    sys.path.insert(0, "src")
+    import numpy as np
+    from repro.columnar.table import Table
+    from repro.query import Catalog, CostModel, Executor, Q, QueryServer, \
+        load_calibration
+
+    if smoke:
+        n_rows = 1 << 13
+    n_templates, n_queries = (12, 60) if smoke else (32, 300)
+    rng = np.random.default_rng(0)
+    lineitem = Table.from_arrays("lineitem", {
+        "orderkey": rng.integers(0, 40_000, size=n_rows).astype(np.int32),
+        "quantity": rng.integers(1, 50, size=n_rows).astype(np.int32),
+        "price": rng.integers(100, 10_000, size=n_rows).astype(np.int32),
+    })
+    orders = Table.from_arrays("orders", {
+        "orderkey": np.asarray(rng.choice(40_000, size=4096, replace=False),
+                               np.int32)})
+    catalog = Catalog.from_tables(lineitem, orders)
+    calibration = load_calibration()
+    report: dict = {"n_rows": n_rows, "n_templates": n_templates,
+                    "n_queries": n_queries,
+                    "calibrated": calibration is not None}
+
+    def make_executor(**kw):
+        n_eng = len(__import__("jax").devices())
+        return Executor(catalog,
+                        cost_model=CostModel(n_eng,
+                                             calibration=calibration), **kw)
+
+    # distinct join+filter+aggregate templates (distinct bounds => distinct
+    # fingerprints; one shared compilation since bounds are traced)
+    ops = ("sum", "count", "mean")
+    templates = [
+        getattr(Q.scan("lineitem").join(Q.scan("orders"), on="orderkey")
+                 .filter("quantity", 1 + i, 1 + i + 6), "aggregate")(
+                     ops[i % 3], "price")
+        for i in range(n_templates)]
+
+    def zipf_workload(s: float):
+        p = 1.0 / np.arange(1, n_templates + 1) ** s
+        p /= p.sum()
+        idx = rng.choice(n_templates, size=n_queries, p=p)
+        return [templates[i] for i in idx]
+
+    def serve(workload, ex) -> dict:
+        """Sequential serving (one drain per query): intra-batch dedup
+        cannot fold repeats, so every saved execution is the cache's."""
+        srv = QueryServer(ex)
+        lat = []
+        t0 = time.perf_counter()
+        for q in workload:
+            t = time.perf_counter()
+            srv.query(q)
+            lat.append(time.perf_counter() - t)
+        wall = time.perf_counter() - t0
+        lat.sort()
+        return {
+            "wall_ms": round(wall * 1e3, 2),
+            "queries_per_s": round(len(workload) / wall, 1),
+            "latency_p50_us": round(lat[len(lat) // 2] * 1e6, 1),
+            "latency_p95_us": round(lat[int(0.95 * (len(lat) - 1))] * 1e6,
+                                    1),
+            "n_cached": srv.n_cached,
+        }
+
+    # --- hit-rate sweep over Zipf skew --------------------------------------
+    sweep = {}
+    for s in (0.6, 1.0, 1.4):
+        ex = make_executor(cache_bytes=64 << 20)
+        wl = zipf_workload(s)
+        for q in wl:                      # compile + admit (cold)
+            ex.execute(q)
+        stats = ex.stats_dict()
+        sweep[str(s)] = {
+            "result_hit_rate": round(
+                stats["result_cache_hits"] / len(wl), 3),
+            "semantic_hit_rate": round(
+                stats["semantic_cache_hit_rate"], 3),
+            "entries": stats["semantic_cache_entries"],
+            "used_bytes": stats["semantic_cache_used_bytes"],
+        }
+    report["zipf_hit_rate_sweep"] = sweep
+
+    # --- warm vs cold vs disabled -------------------------------------------
+    workload = zipf_workload(1.2)
+    ex_cached = make_executor(cache_bytes=64 << 20)
+    cold = serve(workload, ex_cached)
+    warm = serve(workload, ex_cached)
+    ex_plain = make_executor()
+    serve(workload, ex_plain)             # warm its compile cache
+    disabled = serve(workload, ex_plain)
+    # differential: every template answer matches the disabled executor
+    mismatches = sum(
+        1 for q in templates
+        if ex_cached.execute(q).value != ex_plain.execute(q).value)
+    speedup = warm["queries_per_s"] / max(disabled["queries_per_s"], 1e-9)
+    report["serving"] = {
+        "cold": cold,
+        "warm": warm,
+        "disabled": disabled,
+        "warm_vs_disabled_x": round(speedup, 2),
+        "warm_vs_cold_x": round(
+            warm["queries_per_s"] / max(cold["queries_per_s"], 1e-9), 2),
+        "value_mismatches": mismatches,
+        "meets_3x_acceptance": bool(speedup >= 3.0),
+    }
+
+    # --- eviction pressure ---------------------------------------------------
+    # materializing (Project-rooted) queries under a budget far below the
+    # working set: answers stay exact while the cache churns
+    proj_templates = [
+        Q.scan("lineitem").filter("quantity", 1 + i, 1 + i + 4)
+         .project("orderkey", "price")
+        for i in range(8)]
+    ex_tight = make_executor(cache_bytes=64 << 10)      # 64 KiB
+    t0 = time.perf_counter()
+    reps = 2 if smoke else 4
+    for _ in range(reps):
+        for q in proj_templates:
+            ex_tight.execute(q)
+    tight_wall = time.perf_counter() - t0
+    stats = ex_tight.stats_dict()
+    report["eviction_pressure"] = {
+        "budget_bytes": 64 << 10,
+        "queries": reps * len(proj_templates),
+        "queries_per_s": round(reps * len(proj_templates) / tight_wall, 1),
+        "used_bytes": stats["semantic_cache_used_bytes"],
+        "evicted": stats["semantic_cache_evicted"],
+        "rejected": stats["semantic_cache_rejected"],
+        "within_budget": stats["semantic_cache_used_bytes"] <= (64 << 10),
+    }
+
+    # --- mutation invalidation differential ----------------------------------
+    q = templates[0]
+    stale = ex_cached.execute(q).value
+    catalog.update_column(
+        "lineitem", "price",
+        rng.integers(100, 10_000, size=n_rows).astype(np.int32))
+    after_cached = ex_cached.execute(q)
+    after_plain = make_executor().execute(q).value
+    report["mutation_differential"] = {
+        "served_stale": bool(after_cached.result_cache_hit),
+        "post_mutation_identical_to_disabled":
+            after_cached.value == after_plain,
+        "value_changed": after_cached.value != stale,
+        "invalidated_entries": ex_cached.cache.invalidated,
+    }
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+    return report
+
+
+def cache_figures():
+    """run.py hook: (name, us_per_call, derived) rows, always FULL scale —
+    run.py's --smoke mode skips this hook (CI smoke coverage comes from
+    ``bench_cache.py --smoke`` directly), so the committed
+    BENCH_cache.json is never clobbered with smoke data."""
+    rep = main()
+    s = rep["serving"]
+    rows = [
+        ("cache_warm_serving", 1e6 / max(s["warm"]["queries_per_s"], 1e-9),
+         f"{s['warm_vs_disabled_x']}x_vs_disabled,"
+         f"p50={s['warm']['latency_p50_us']}us"),
+        ("cache_disabled_serving",
+         1e6 / max(s["disabled"]["queries_per_s"], 1e-9),
+         f"{s['disabled']['queries_per_s']}q/s"),
+    ]
+    for skew, r in rep["zipf_hit_rate_sweep"].items():
+        rows.append((f"cache_hit_rate_zipf_{skew}", 0.0,
+                     f"hit_rate={r['result_hit_rate']}"))
+    m = rep["mutation_differential"]
+    rows.append(("cache_mutation_differential", 0.0,
+                 f"identical={m['post_mutation_identical_to_disabled']},"
+                 f"stale_served={m['served_stale']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

@@ -14,6 +14,7 @@ def main() -> None:
     sys.path.insert(0, os.path.join(_ROOT, "src"))
     sys.path.insert(0, _ROOT)
     from benchmarks.paper_figures import ALL
+    from benchmarks.bench_cache import cache_figures
     from benchmarks.bench_join_duplicates import join_duplicates
     from benchmarks.calibrate import calibrate
     smoke = "--smoke" in sys.argv
@@ -25,9 +26,10 @@ def main() -> None:
     if "--only" in sys.argv:
         only = sys.argv[sys.argv.index("--only") + 1]
 
-    # join_duplicates runs full-scale only: smoke mode keeps the two fast
-    # figures, and bench_join_duplicates.py --smoke covers the smoke case
-    fns = ALL + [join_duplicates]
+    # join_duplicates / cache_figures run full-scale only: smoke mode
+    # keeps the two fast figures, and the bench_*.py --smoke entry points
+    # cover the smoke case
+    fns = ALL + [join_duplicates, cache_figures]
     if smoke:
         fns = [fn for fn in ALL if fn.__name__ in
                ("fig2_bandwidth", "tab3_roofline")]

@@ -68,6 +68,10 @@ class Table:
     name: str
     columns: dict[str, Column]
     plan: Optional[ChannelPlan] = None
+    # mutation counter: every in-place column update bumps it, so plan
+    # fingerprints (query/logical.fingerprint) that embed the version can
+    # never serve a cached result computed against stale data
+    version: int = 0
 
     @property
     def num_rows(self) -> int:
@@ -76,12 +80,21 @@ class Table:
     def column(self, name: str) -> jax.Array:
         return self.columns[name].data
 
+    def update_column(self, name: str, data) -> "Table":
+        """Replace one column in place and bump the table version — the
+        only mutation surface, so version-keyed caches stay correct."""
+        arr = jnp.asarray(data)
+        assert arr.shape[0] == self.num_rows, (arr.shape, self.num_rows)
+        self.columns[name] = Column(arr, name)
+        self.version += 1
+        return self
+
     def place(self, plan: ChannelPlan) -> "Table":
         """Partition every column per the channel plan (paper's runtime
         partitioning; the shim's static merging is the sharding layout)."""
         cols = {k: Column(plan.place(c.data), k)
                 for k, c in self.columns.items()}
-        return Table(self.name, cols, plan)
+        return Table(self.name, cols, plan, self.version)
 
     # -- morsel views (streaming execution path) ---------------------------- #
 

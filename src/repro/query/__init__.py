@@ -12,18 +12,21 @@ layer of the paper, grown into a subsystem).
 """
 from repro.query.logical import (                                # noqa: F401
     Aggregate, Filter, FilterProject, Join, Node, Project, Q, Scan,
-    TrainGLM, literals, output_columns, pformat, signature, walk,
+    TrainGLM, canonicalize, fingerprint, literals, output_columns,
+    pformat, signature, tables_of, walk,
 )
+from repro.query.cache import CacheEntry, SemanticCache          # noqa: F401
 from repro.query.cost import (                                   # noqa: F401
     ColumnStats, CostModel, PhysNode, TableStats, column_placements,
     estimate_rows, join_orientation_cost, load_calibration, plan_physical,
 )
 from repro.query.optimize import (                               # noqa: F401
-    choose_build_side, fuse_filter_project, optimize, prune_columns,
-    push_down_filters,
+    choose_build_side, common_subplans, fuse_filter_project, optimize,
+    optimize_batch, prune_columns, push_down_filters,
 )
 from repro.query.pipeline import (                               # noqa: F401
-    BreakerSpec, CompiledPipeline, StreamPlan, analyze,
+    BreakerSpec, CompiledPipeline, CompiledProject, ProjectStreamPlan,
+    StreamPlan, analyze, analyze_project,
 )
 from repro.query.exec import (                                   # noqa: F401
     Catalog, Executor, PlacementCapacityError, Result, sql_like_query,

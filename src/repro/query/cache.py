@@ -1,0 +1,193 @@
+"""Semantic result & subplan cache — the budgeted materialization layer.
+
+The plan cache (``exec.Executor._compiled``) only reuses *compilations*;
+this module reuses *work*: final results keyed by semantic fingerprint,
+join builds (the streamed pipeline's breaker state), selection index
+bitmaps, and materialized intermediate tables.  The paper's MonetDB
+integration pays the data-movement bill per query even when consecutive
+analytics queries share selections and join builds — a hit here skips
+the transfer AND the recomputation.
+
+Correctness comes from the key, not from flushing: fingerprints embed
+every referenced table's version (``columnar.table.Table.version``), so
+a mutation makes stale entries unreachable immediately;
+``invalidate_table`` additionally sweeps them out so dead bytes never
+crowd the budget.
+
+Admission and eviction are cost-model priced (``CostModel.cache_score``:
+recompute seconds avoided per resident byte, scaled by observed reuse) —
+the cache keeps what is expensive to rebuild, not what is big.  An entry
+is admitted only by evicting strictly lower-scored residents; if the
+bytes cannot be freed that way, the candidate is rejected instead of
+churning more valuable state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Hashable, Iterable, Optional, Tuple
+
+DEFAULT_BUDGET_BYTES = 64 << 20          # 64 MiB of materialized state
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    key: Hashable
+    kind: str                            # result | subplan | build | bitmap
+    value: object
+    n_bytes: int
+    recompute_s: float
+    tables: Tuple[str, ...]              # dependency sweep index
+    hits: int = 0
+    tick: int = 0                        # last-touch order (LRU tiebreak)
+
+    def score(self, model) -> float:
+        return model.cache_score(self.recompute_s, self.n_bytes,
+                                 self.hits)
+
+
+class SemanticCache:
+    """Byte-budgeted store of materialized query state.
+
+    ``model`` is the executor's ``CostModel`` — the same object that
+    prices physical plans prices residency, so "expensive to rebuild"
+    means the same thing in both places.
+    """
+
+    def __init__(self, budget_bytes: int = DEFAULT_BUDGET_BYTES, *,
+                 model=None):
+        if model is None:
+            from repro.query.cost import CostModel
+            model = CostModel(1)
+        self.model = model
+        self.budget_bytes = int(budget_bytes)
+        self._entries: Dict[Hashable, CacheEntry] = {}
+        self._hinted: set = set()
+        self._tick = 0
+        self.used_bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.admitted = 0
+        self.rejected = 0
+        self.evicted = 0
+        self.invalidated = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    # -- lookup ------------------------------------------------------------- #
+
+    def get(self, key: Hashable) -> Optional[CacheEntry]:
+        e = self._entries.get(key)
+        if e is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        e.hits += 1
+        self._tick += 1
+        e.tick = self._tick
+        return e
+
+    def peek(self, key: Hashable) -> Optional[CacheEntry]:
+        """Lookup without touching hit/recency accounting."""
+        return self._entries.get(key)
+
+    # -- admission / eviction ------------------------------------------------ #
+
+    def hint(self, keys: Iterable[Hashable]) -> None:
+        """Mark keys the caller KNOWS will be reused (the optimizer's
+        common-subplan extraction over an admitted batch): they are
+        admitted as if already hit once, so certain intra-batch reuse is
+        not priced like a speculative single-shot entry.  Each call
+        REPLACES the hint set — hints describe one admission batch, so
+        unconsumed leftovers from a previous batch are dropped rather
+        than accumulated forever."""
+        self._hinted = set(keys)
+
+    def put(self, key: Hashable, value: object, *, kind: str,
+            n_bytes: int, recompute_s: float,
+            tables: Iterable[str] = ()) -> bool:
+        """Priced admission.  Returns whether the entry was admitted."""
+        n_bytes = max(int(n_bytes), 0)
+        if n_bytes > self.budget_bytes:
+            self.rejected += 1
+            return False
+        hinted = key in self._hinted
+        if hinted:
+            self._hinted.discard(key)
+        old = self._entries.get(key)
+        if old is not None:
+            self._drop(old)
+        cand = CacheEntry(key, kind, value, n_bytes, recompute_s,
+                          tuple(tables), hits=1 if hinted else 0)
+        score = cand.score(self.model)
+        need = self.used_bytes + n_bytes - self.budget_bytes
+        victims = []
+        if need > 0:
+            # evict cheapest-to-rebuild-per-byte first, oldest breaking
+            # ties; stop (and reject) before displacing anything the
+            # model prices above the candidate
+            for e in sorted(self._entries.values(),
+                            key=lambda e: (e.score(self.model), e.tick)):
+                if e.score(self.model) >= score:
+                    break
+                victims.append(e)
+                need -= e.n_bytes
+                if need <= 0:
+                    break
+            if need > 0:
+                self.rejected += 1
+                return False
+        for e in victims:
+            self._drop(e)
+            self.evicted += 1
+        self._tick += 1
+        cand.tick = self._tick
+        self._entries[key] = cand
+        self.used_bytes += n_bytes
+        self.admitted += 1
+        return True
+
+    def _drop(self, e: CacheEntry) -> None:
+        del self._entries[e.key]
+        self.used_bytes -= e.n_bytes
+
+    # -- invalidation --------------------------------------------------------- #
+
+    def invalidate_table(self, table: str) -> int:
+        """Sweep every entry that depends on ``table``.  Version-embedded
+        fingerprints already make them unreachable — this frees their
+        bytes so dead state never wins eviction fights."""
+        stale = [e for e in self._entries.values() if table in e.tables]
+        for e in stale:
+            self._drop(e)
+        self.invalidated += len(stale)
+        return len(stale)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._hinted.clear()
+        self.used_bytes = 0
+
+    # -- reporting ------------------------------------------------------------ #
+
+    def stats_dict(self) -> dict:
+        total = self.hits + self.misses
+        by_kind: Dict[str, int] = {}
+        for e in self._entries.values():
+            by_kind[e.kind] = by_kind.get(e.kind, 0) + 1
+        return {
+            "semantic_cache_entries": len(self._entries),
+            "semantic_cache_entries_by_kind": by_kind,
+            "semantic_cache_used_bytes": self.used_bytes,
+            "semantic_cache_budget_bytes": self.budget_bytes,
+            "semantic_cache_hits": self.hits,
+            "semantic_cache_misses": self.misses,
+            "semantic_cache_hit_rate": self.hits / total if total else 0.0,
+            "semantic_cache_admitted": self.admitted,
+            "semantic_cache_rejected": self.rejected,
+            "semantic_cache_evicted": self.evicted,
+            "semantic_cache_invalidated": self.invalidated,
+        }

@@ -258,6 +258,32 @@ class CostModel:
             return 0.0
         return n_bytes * (self.n_engines - 1) / ICI_BW
 
+    # -- semantic-cache pricing (recompute-cost vs residency-bytes) --------- #
+
+    def cache_score(self, recompute_s: float, n_bytes: int,
+                    hits: int = 0) -> float:
+        """Value density of a materialized entry: seconds of recompute
+        avoided per resident byte, scaled by observed reuse.  The
+        semantic cache admits and evicts by this score, so an expensive-
+        to-rebuild join build outlives a bigger but trivially-recomputed
+        selection even when both fit."""
+        return max(recompute_s, 0.0) * (1.0 + hits) \
+            / max(float(n_bytes), 1.0)
+
+    def build_price(self, n_rows: float, n_value_cols: int = 0) -> float:
+        """Recompute cost of a sorted-bucket join build: the O(n log n)
+        key sort plus prefix sums over each carried value column, plus
+        the per-engine replication broadcast — what a cache hit on a
+        ``JoinBuild`` saves a streamed plan."""
+        n_rows = max(float(n_rows), 1.0)
+        sort_bytes = n_rows * BYTES_PER_VALUE * max(
+            math.log2(max(n_rows, 2.0)), 1.0)
+        value_bytes = n_rows * BYTES_PER_VALUE * (1 + n_value_cols)
+        return (self.stream_cost(sort_bytes + value_bytes, impl="xla",
+                                 placement="replicated")
+                + self.broadcast_cost(n_rows * BYTES_PER_VALUE
+                                      * (2 + n_value_cols)))
+
     # -- morsel pricing (streaming pipeline) -------------------------------- #
 
     def morsel_cost(self, total_rows: float, morsel_rows: int, n_cols: int,

@@ -25,6 +25,7 @@ here — callers hand the catalog *unplaced* host tables.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Dict, Optional, Tuple
 
@@ -38,6 +39,7 @@ from repro.core.channels import ChannelPlan, plan as make_plan
 from repro.launch.mesh import make_host_mesh
 from repro.query import logical as L
 from repro.query import pipeline as pl
+from repro.query.cache import SemanticCache
 from repro.query.cost import (
     ColumnStats, CostModel, PhysNode, TableStats, column_placements,
     key_is_unique, load_calibration, plan_physical,
@@ -78,6 +80,17 @@ class Catalog:
             cat.register(t)
         return cat
 
+    def update_column(self, table: str, column: str, data) -> None:
+        """The mutation surface: replace a base column, bump the table's
+        version (invalidating every dependent fingerprint), and refresh
+        the statistics the optimizer plans against."""
+        self.tables[table].update_column(column, data)
+        self.register(self.tables[table])
+
+    def versions(self) -> Dict[str, int]:
+        """table -> mutation counter, the fingerprint dependency map."""
+        return {name: t.version for name, t in self.tables.items()}
+
 
 @dataclasses.dataclass
 class Result:
@@ -86,6 +99,7 @@ class Result:
     cache_hit: bool
     wall_s: float
     mode: str = "batch"                 # batch | stream
+    result_cache_hit: bool = False      # served from the semantic cache
 
     def explain(self) -> str:
         if self.physical is None:
@@ -105,7 +119,10 @@ class Executor:
 
     def __init__(self, catalog: Catalog, mesh=None, axis: str = "model",
                  cost_model: Optional[CostModel] = None,
-                 placement_capacity_bytes: Optional[int] = None):
+                 placement_capacity_bytes: Optional[int] = None,
+                 cache_bytes: Optional[int] = None,
+                 semantic_cache: Optional[SemanticCache] = None,
+                 overlap_transfers: Optional[bool] = None):
         self.catalog = catalog
         self.mesh = mesh if mesh is not None else make_host_mesh()
         self.axis = axis
@@ -115,18 +132,75 @@ class Executor:
         self.cost_model = cost_model or CostModel(
             n_eng, calibration=load_calibration())
         self.placement_capacity_bytes = placement_capacity_bytes
+        # semantic result/subplan cache: opt-in (``cache_bytes`` budget,
+        # or a shared SemanticCache instance) so differential baselines
+        # and throughput benchmarks measure real execution by default
+        if semantic_cache is not None:
+            self.cache: Optional[SemanticCache] = semantic_cache
+        elif cache_bytes:
+            self.cache = SemanticCache(cache_bytes, model=self.cost_model)
+        else:
+            self.cache = None
+        if overlap_transfers is None:
+            overlap_transfers = os.environ.get(
+                "REPRO_OVERLAP", "1").lower() not in ("0", "off", "no")
+        self.overlap_transfers = overlap_transfers
         self.plans: Dict[str, ChannelPlan] = {
             p: make_plan(self.mesh, axis, p)
             for p in ("partitioned", "replicated", "congested")}
         self._compiled: Dict[tuple, object] = {}
         self._planned: Dict[L.Node, tuple] = {}
+        self._fps: Dict[L.Node, str] = {}
         self._placed: Dict[Tuple[str, str, str], jax.Array] = {}
-        self._builds: Dict[pl.BreakerSpec, tuple] = {}
+        self._builds: Dict[tuple, tuple] = {}
         self._morsels: Dict[tuple, jax.Array] = {}
         self._morsel_cache_rows: Dict[str, int] = {}
+        self._seen_versions: Dict[str, int] = catalog.versions()
         self.cache_hits = 0
         self.cache_misses = 0
+        self.result_hits = 0          # semantic cache: whole results
+        self.subplan_hits = 0         # semantic cache: eager intermediates
+        self.build_hits = 0           # semantic cache: join builds
         self.trace_count = 0          # bumped inside traced bodies only
+
+    # -- versioned invalidation ---------------------------------------------- #
+
+    def _sync_versions(self) -> None:
+        """Notice table mutations since the last call and purge every
+        device-state cache derived from stale data: placements, morsel
+        slices, join builds, memoized plans (statistics changed), and the
+        semantic cache's dependent entries.  Fingerprints embed versions,
+        so even an unswept entry could never be *served* — the sweep only
+        reclaims bytes and device memory."""
+        for name, t in self.catalog.tables.items():
+            if self._seen_versions.get(name) == t.version:
+                continue
+            if name in self._seen_versions:
+                self.catalog.register(t)           # refresh statistics
+                self._placed = {k: v for k, v in self._placed.items()
+                                if k[0] != name}
+                self._morsels = {k: v for k, v in self._morsels.items()
+                                 if k[0] != name}
+                self._morsel_cache_rows.pop(name, None)
+                self._builds = {k: v for k, v in self._builds.items()
+                                if k[0].table != name}
+                self._planned.clear()              # stats feed every plan
+                self._fps.clear()
+                if self.cache is not None:
+                    self.cache.invalidate_table(name)
+            self._seen_versions[name] = t.version
+
+    def fingerprint_of(self, node: L.Node) -> str:
+        """Semantic fingerprint of the OPTIMIZED form of ``node`` against
+        current table versions — the result-cache key (memoized; the memo
+        is flushed whenever any table version moves)."""
+        self._sync_versions()
+        fp = self._fps.get(node)
+        if fp is None:
+            opt, _ = self.plan(node)
+            fp = L.fingerprint(opt, self.catalog.versions())
+            self._fps[node] = fp
+        return fp
 
     # -- placement ---------------------------------------------------------- #
 
@@ -166,28 +240,56 @@ class Executor:
         the plan has no streamable probe spine."""
         node = q.node if isinstance(q, L.Q) else q
         t0 = time.perf_counter()
+        self._sync_versions()          # every path, incl. the naive oracle
         if not optimized:
             if mode == "stream":
                 raise ValueError(
                     "mode='stream' lowers through the optimizer's physical "
                     "plan; it cannot combine with optimized=False")
+            # the naive path is the differential oracle: it never reads
+            # or feeds the semantic cache
             return Result(self._run_eager(node, None), None, False,
                           time.perf_counter() - t0)
+        orig = node
         node, phys = self.plan(node)
+        if self.cache is not None:
+            fp = self.fingerprint_of(orig)
+            entry = self.cache.get(("result", fp))
+            if entry is not None:
+                self.result_hits += 1
+                return Result(entry.value, phys, True,
+                              time.perf_counter() - t0, mode=mode,
+                              result_cache_hit=True)
         if mode == "stream":
             splan = pl.analyze(node, self.catalog.stats)
             if splan is not None:
                 value, hit = self._run_stream(node, phys, splan, morsel_rows)
+                self._admit_result(orig, node, phys, value)
                 return Result(value, phys, hit, time.perf_counter() - t0,
                               mode="stream")
         value, hit = self._run(node, phys)
+        self._admit_result(orig, node, phys, value)
         return Result(value, phys, hit, time.perf_counter() - t0)
+
+    def _admit_result(self, orig: L.Node, opt: L.Node, phys: PhysNode,
+                      value) -> None:
+        """Offer a finished result to the semantic cache, priced by the
+        physical plan's modeled recompute cost."""
+        if self.cache is None:
+            return
+        self.cache.put(("result", self.fingerprint_of(orig)), value,
+                       kind="result", n_bytes=_value_nbytes(value),
+                       recompute_s=phys.total_cost_s,
+                       tables=L.tables_of(opt))
 
     def plan(self, node: L.Node):
         """optimize + plan_physical, memoized by the (hashable) logical
         node — hot repeated queries skip replanning entirely (the cost-
         priced build-side choice runs plan_physical per orientation, so
-        replanning every execution tripled the planning work)."""
+        replanning every execution tripled the planning work).  Syncs
+        table versions first, so a mutation flushes the memo before any
+        stale statistics could be replayed."""
+        self._sync_versions()
         if node in self._planned:
             return self._planned[node]
         opt = optimize(node, self.catalog.stats, self.cost_model)
@@ -282,20 +384,47 @@ class Executor:
     def _breaker_arrays(self, breakers) -> list:
         """Flattened, cached join-build state (the pipeline breakers).
         Build columns replicate through ``placed()`` — the same per-column
-        decision surface (and capacity gate) as every other placement."""
+        decision surface (and capacity gate) as every other placement.
+
+        With a semantic cache, builds live there instead of the private
+        dict: byte-budgeted (an evicted build is rebuilt, not leaked),
+        version-keyed (a mutated build table misses instead of serving a
+        stale sort), and shared with every consumer of the cache — a
+        cached build lets a streamed plan skip its entire build phase."""
         flat: list = []
         for b in breakers:
-            if b not in self._builds:
-                cols = {b.on: Column(self.placed(b.table, b.on,
-                                                 "replicated"), b.on)}
-                for c in b.value_cols:
-                    cols[c] = Column(self.placed(b.table, c, "replicated"),
-                                     c)
-                build = engine.join_build(Table(b.table, cols), b.on,
-                                          b.value_cols, unique=b.unique)
-                self._builds[b] = build.flat()
-            flat.extend(self._builds[b])
+            version = self.catalog.tables[b.table].version
+            if self.cache is not None:
+                ckey = ("build", b.table, version, b.on, b.value_cols,
+                        b.unique)
+                entry = self.cache.get(ckey)
+                if entry is not None:
+                    self.build_hits += 1
+                    flat.extend(entry.value)
+                    continue
+                arrays = self._make_build(b)
+                self.cache.put(
+                    ckey, arrays, kind="build",
+                    n_bytes=sum(a.nbytes for a in arrays),
+                    recompute_s=self.cost_model.build_price(
+                        self.catalog.stats[b.table].num_rows,
+                        len(b.value_cols)),
+                    tables=(b.table,))
+                flat.extend(arrays)
+                continue
+            key = (b, version)
+            if key not in self._builds:
+                self._builds[key] = self._make_build(b)
+            flat.extend(self._builds[key])
         return flat
+
+    def _make_build(self, b: pl.BreakerSpec) -> tuple:
+        cols = {b.on: Column(self.placed(b.table, b.on, "replicated"),
+                             b.on)}
+        for c in b.value_cols:
+            cols[c] = Column(self.placed(b.table, c, "replicated"), c)
+        return engine.join_build(Table(b.table, cols), b.on,
+                                 b.value_cols, unique=b.unique).flat()
 
     # -- streaming path (morsel-driven pipeline) ----------------------------- #
 
@@ -321,7 +450,8 @@ class Executor:
         lits = jnp.asarray(L.literals(node), jnp.int32)
         get = lambda i: self._stream_morsel(table, cp.stream_cols,   # noqa: E731
                                             spec, i, cache_ok)
-        carry = pl.drive(cp, spec.n_morsels, get, builds, lits)
+        carry = pl.drive(cp, spec.n_morsels, get, builds, lits,
+                         prefetch=self.overlap_transfers)
         return cp.finalize(carry), hit
 
     def morsel_spec(self, table: str, target: Optional[int] = None,
@@ -363,6 +493,29 @@ class Executor:
                     f"capacity {cap}: lower morsel_rows")
         return cp, builds, hit
 
+    def project_pipeline(self, node: L.Node, phys: Optional[PhysNode],
+                         pplan: pl.ProjectStreamPlan, spec: MorselSpec):
+        """Compiled Project-rooted per-morsel step + breaker arrays —
+        the serving streams' path for materializing queries: each morsel
+        yields a compacted output chunk instead of folding a carry."""
+        key = ("proj", spec.rows) + self._cache_key(node, phys)
+        if key in self._compiled:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+            decisions = {p.logical: p
+                         for p in _walk_phys(phys)} if phys else {}
+            impls = tuple(decisions[j].impl if j in decisions else "xla"
+                          for j in pplan.join_nodes)
+
+            def bump():
+                self.trace_count += 1
+
+            self._compiled[key] = pl.compile_project_pipeline(
+                pplan, spec.rows, impls=impls, trace_marker=bump)
+        cpj = self._compiled[key]
+        return cpj, self._breaker_arrays(pplan.breakers)
+
     def _stream_morsel(self, table: str, cols: Tuple[str, ...],
                        spec: MorselSpec, i: int, cache_ok: bool):
         """One morsel's columns, placed partitioned (each morsel shards one
@@ -401,6 +554,15 @@ class Executor:
 
     def _run_eager(self, node: L.Node, phys: Optional[PhysNode]):
         placements = column_placements(phys) if phys else {}
+        # subplan caching (optimized runs only): materialized BAT-style
+        # intermediates — selections, join products — are offered to the
+        # semantic cache under ORDER-SENSITIVE fingerprints (row order is
+        # part of a materialized table's identity), priced by the
+        # physical plan's per-operator recompute cost
+        decisions = {p.logical: p for p in _walk_phys(phys)} if phys \
+            else {}
+        versions = self.catalog.versions() if self.cache is not None \
+            else None
 
         def scan_placement(n: L.Scan) -> str:
             cols = n.columns or ("*",)
@@ -416,21 +578,42 @@ class Executor:
                     return p.impl
             return "xla"
 
+        def eval_cached(n) -> Table:
+            if self.cache is None or phys is None or \
+                    not isinstance(n, (L.Filter, L.FilterProject, L.Join)):
+                return eval_node(n)
+            key = ("subplan",
+                   L.fingerprint(n, versions, order_sensitive=True))
+            entry = self.cache.get(key)
+            if entry is not None:
+                self.subplan_hits += 1
+                return entry.value
+            t = eval_node(n)
+            d = decisions.get(n)
+            self.cache.put(
+                key, t, kind="subplan",
+                n_bytes=sum(c.data.nbytes for c in t.columns.values()),
+                recompute_s=d.total_cost_s if d is not None else 0.0,
+                tables=L.tables_of(n))
+            return t
+
         def eval_node(n) -> Table:
             if isinstance(n, L.Scan):
                 return self._placed_table(n, scan_placement(n))
             if isinstance(n, L.Filter):
-                t = eval_node(n.child)
+                t = eval_cached(n.child)
                 return self._filter_table(t, n.column, n.lo, n.hi,
                                           tuple(t.columns),
-                                          impl=impl_of(n))
+                                          impl=impl_of(n),
+                                          cache_ok=phys is not None)
             if isinstance(n, L.FilterProject):
-                t = eval_node(n.child)
+                t = eval_cached(n.child)
                 return self._filter_table(t, n.column, n.lo, n.hi,
-                                          n.columns, impl=impl_of(n))
+                                          n.columns, impl=impl_of(n),
+                                          cache_ok=phys is not None)
             if isinstance(n, L.Join):
-                lt = eval_node(n.left)
-                rt = eval_node(n.right)
+                lt = eval_cached(n.left)
+                rt = eval_cached(n.right)
                 if lt.plan is None:
                     lt = lt.place(self.plans["partitioned"])
                 pairs = engine.join(
@@ -448,10 +631,10 @@ class Executor:
                                                   axis=0), c)
                 return Table("join", cols)
             if isinstance(n, L.Project):
-                t = eval_node(n.child)
+                t = eval_cached(n.child)
                 return Table("proj", {c: t.columns[c] for c in n.columns})
             if isinstance(n, L.Aggregate):
-                t = eval_node(n.child)
+                t = eval_cached(n.child)
                 col = t.column(n.column)
                 if n.op == "sum":
                     return int(jnp.sum(col)) if jnp.issubdtype(
@@ -464,7 +647,7 @@ class Executor:
                     return float(jnp.mean(col.astype(jnp.float32)))
                 raise ValueError(n.op)
             if isinstance(n, L.TrainGLM):
-                t = eval_node(n.child)
+                t = eval_cached(n.child)
                 return engine.train_glm(t, list(n.features), n.label,
                                         list(n.grid),
                                         self.plans["partitioned"],
@@ -475,7 +658,25 @@ class Executor:
 
     def _filter_table(self, t: Table, column: str, lo: int, hi: int,
                       keep: Tuple[str, ...], *, impl: str = "xla",
-                      block: int = 1024) -> Table:
+                      block: int = 1024, cache_ok: bool = True) -> Table:
+        # selection bitmaps over BASE tables are cacheable: the compacted
+        # index column is the selection's whole cost, and the key embeds
+        # the table version so a mutated column can never replay.
+        # ``cache_ok=False`` is the naive differential-oracle path, which
+        # must neither read nor feed the semantic cache
+        bkey = None
+        if cache_ok and self.cache is not None \
+                and t.name in self.catalog.tables:
+            bkey = ("bitmap", t.name,
+                    self.catalog.tables[t.name].version, column,
+                    int(lo), int(hi))
+            entry = self.cache.get(bkey)
+            if entry is not None:
+                self.subplan_hits += 1
+                idx = entry.value
+                return engine.gather(t, idx,
+                                     [c for c in keep if c in t.columns],
+                                     name=f"{t.name}.sel")
         n_eng = self.mesh.shape[self.axis]
         if t.plan is not None and t.num_rows % (n_eng * block) == 0:
             sel = engine.select_range(t, column, lo, hi, impl=impl,
@@ -487,12 +688,18 @@ class Executor:
             col = t.column(column)
             mask = (col >= lo) & (col <= hi)
             idx = engine.compact_positions(mask, int(jnp.sum(mask)))
+        if bkey is not None:
+            self.cache.put(
+                bkey, idx, kind="bitmap", n_bytes=idx.nbytes,
+                recompute_s=self.cost_model.stream_cost(
+                    t.num_rows * 4, impl=impl, placement="partitioned"),
+                tables=(t.name,))
         return engine.gather(t, idx, [c for c in keep if c in t.columns],
                              name=f"{t.name}.sel")
 
     def stats_dict(self) -> dict:
         total = self.cache_hits + self.cache_misses
-        return {
+        out = {
             "plan_cache_hits": self.cache_hits,
             "plan_cache_misses": self.cache_misses,
             "plan_cache_hit_rate": self.cache_hits / total if total else 0.0,
@@ -501,13 +708,29 @@ class Executor:
             "cached_builds": len(self._builds),
             "cached_morsels": len(self._morsels),
             "cost_model_calibrated_from": self.cost_model.calibrated_from,
+            "result_cache_hits": self.result_hits,
+            "subplan_cache_hits": self.subplan_hits,
+            "build_cache_hits": self.build_hits,
         }
+        if self.cache is not None:
+            out.update(self.cache.stats_dict())
+        return out
 
 
 def _walk_phys(p: PhysNode):
     yield p
     for c in p.children:
         yield from _walk_phys(c)
+
+
+def _value_nbytes(value) -> int:
+    """Residency size of a cached result: device bytes for tables and
+    array tuples, a nominal few words for scalars."""
+    if isinstance(value, Table):
+        return sum(c.data.nbytes for c in value.columns.values())
+    if isinstance(value, tuple):
+        return sum(_value_nbytes(v) for v in value)
+    return int(getattr(value, "nbytes", 16))
 
 
 def sql_like_query(executor: Executor, q, **kw):

@@ -12,7 +12,8 @@ compiled executable as traced scalars.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+import hashlib
+from typing import Mapping, Optional, Sequence, Tuple
 
 from repro.core.sgd_glm import HyperParams
 
@@ -180,6 +181,128 @@ def output_columns(node: Node, table_columns) -> Tuple[str, ...]:
     if isinstance(node, TrainGLM):
         return node.features + (node.label,)
     raise TypeError(node)
+
+
+# --------------------------------------------------------------------------- #
+# semantic fingerprints (the result/subplan cache key)
+#
+# ``signature``/``literals`` above split a plan for the COMPILE cache
+# (constants masked — different range bounds share one executable).  The
+# fingerprint below is the RESULT-cache key: constants are part of the
+# identity, structure is canonicalized so semantically equal plans
+# collide on purpose, and every referenced table's version is folded in
+# so a mutation makes every dependent fingerprint unreachable.
+
+def canonicalize(node: Node) -> Node:
+    """Semantics-preserving normal form.  Adjacent range filters commute,
+    so a Filter chain is merged per column (range intersection) and
+    re-emitted in sorted column order; two queries that spell the same
+    conjunction differently share one canonical tree.  The rewrite is
+    only used for fingerprinting — execution keeps the optimizer's tree,
+    whose literal order must match ``literals``."""
+    node = _rewrite_canon_children(node)
+    if isinstance(node, Filter):
+        chain = []
+        n = node
+        while isinstance(n, Filter):
+            chain.append(n)
+            n = n.child
+        bounds: dict = {}
+        for f in chain:                       # intersect per column
+            lo, hi = bounds.get(f.column, (f.lo, f.hi))
+            bounds[f.column] = (max(lo, f.lo), min(hi, f.hi))
+        out = n
+        for col in sorted(bounds, reverse=True):   # outermost = smallest
+            lo, hi = bounds[col]
+            out = Filter(out, col, lo, hi)
+        return out
+    return node
+
+
+def _rewrite_canon_children(node: Node) -> Node:
+    updates = {f.name: canonicalize(getattr(node, f.name))
+               for f in dataclasses.fields(node)
+               if isinstance(getattr(node, f.name), Node)}
+    return dataclasses.replace(node, **updates) if updates else node
+
+
+def _known_cols(node: Node):
+    """Output column set when provable from the tree alone (no catalog):
+    None means unknown (a Scan with an implicit column list).  Used to
+    gate join-side commutation — the join's column merge is left-wins,
+    so side order is load-bearing whenever non-key names overlap."""
+    if isinstance(node, Scan):
+        return set(node.columns) if node.columns is not None else None
+    if isinstance(node, Filter):
+        return _known_cols(node.child)
+    if isinstance(node, (Project, FilterProject)):
+        return set(node.columns)
+    if isinstance(node, Join):
+        l, r = _known_cols(node.left), _known_cols(node.right)
+        return l | r if l is not None and r is not None else None
+    if isinstance(node, Aggregate):
+        return {node.column}
+    if isinstance(node, TrainGLM):
+        return set(node.features) | {node.label}
+    return None
+
+
+def _join_commutes(node: Join) -> bool:
+    """Sides commute only when both output column sets are provable and
+    their non-key columns are disjoint: with an overlap, the merged
+    output takes the LEFT side's column, so Join(a, b) and Join(b, a)
+    aggregate different values and must not share a fingerprint."""
+    l, r = _known_cols(node.left), _known_cols(node.right)
+    if l is None or r is None:
+        return False
+    return not ((l - {node.on}) & (r - {node.on}))
+
+
+def _canonical_key(node: Node, order_insensitive: bool):
+    """Nested-tuple identity of a canonical plan.  Under an order-
+    insensitive root (a commutative Aggregate), inner-join sides sort by
+    key when commutation is provably safe (disjoint non-key columns) —
+    Join(a, b) and Join(b, a) then feed the aggregate the same value
+    multiset.  Row-producing roots (Project, TrainGLM's SGD sequence)
+    stay order-sensitive: a swapped join changes their output."""
+    attrs = [type(node).__name__]
+    child_keys = []
+    for f in dataclasses.fields(node):
+        v = getattr(node, f.name)
+        if isinstance(v, Node):
+            child_keys.append(_canonical_key(v, order_insensitive))
+        else:
+            attrs.append((f.name, repr(v)))
+    if order_insensitive and isinstance(node, Join) \
+            and _join_commutes(node):
+        child_keys.sort()
+    return (tuple(attrs), tuple(child_keys))
+
+
+def tables_of(node: Node) -> Tuple[str, ...]:
+    """Base tables a plan reads, sorted — the fingerprint's dependency
+    set (and the invalidation sweep's index)."""
+    return tuple(sorted({n.table for n in walk(node)
+                         if isinstance(n, Scan)}))
+
+
+def fingerprint(node: Node,
+                versions: Optional[Mapping[str, int]] = None, *,
+                order_sensitive: Optional[bool] = None) -> str:
+    """Stable semantic hash of a plan against specific table versions.
+
+    Equal fingerprints mean equal results: filter-chain permutations
+    collide, join sides commute only under a commutative Aggregate root
+    (pass ``order_sensitive=True`` to force exact structure — the
+    subplan-cache key for materialized intermediates, whose row order
+    matters).  Any referenced table's version bump changes the hash, so
+    stale cache entries are unreachable rather than merely flagged."""
+    if order_sensitive is None:
+        order_sensitive = not isinstance(node, Aggregate)
+    key = _canonical_key(canonicalize(node), not order_sensitive)
+    deps = tuple((t, int(versions.get(t, 0)) if versions else 0)
+                 for t in tables_of(node))
+    return hashlib.sha256(repr((key, deps)).encode()).hexdigest()[:20]
 
 
 def pformat(node: Node, indent: int = 0, note=None) -> str:

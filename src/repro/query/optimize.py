@@ -14,7 +14,7 @@ Each rule is a pure Node -> Node rewrite; ``optimize`` composes them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Set
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.query import logical as L
 from repro.query.cost import TableStats, estimate_rows
@@ -119,9 +119,19 @@ def choose_build_side(node: L.Node, stats: Dict[str, TableStats],
     physical fast path downstream."""
     from repro.query.cost import join_orientation_cost
 
+    cols = _table_columns(stats)
+
     def visit(n: L.Node) -> L.Node:
         n = _rewrite_children(n, visit)
         if not isinstance(n, L.Join):
+            return n
+        # the join's column merge is left-wins: when both sides carry a
+        # same-named non-key column, swapping sides changes which values
+        # survive — orientation is semantic, not just physical, so the
+        # optimizer must keep it
+        lcols = set(L.output_columns(n.left, cols))
+        rcols = set(L.output_columns(n.right, cols))
+        if (lcols - {n.on}) & (rcols - {n.on}):
             return n
         swapped = L.Join(n.right, n.left, n.on)
         if model is None:
@@ -154,3 +164,39 @@ def optimize(node: L.Node, stats: Dict[str, TableStats],
     node = prune_columns(node, stats)
     node = fuse_filter_project(node)
     return node
+
+
+# --------------------------------------------------------------------------- #
+# rule 5 (batch-level): common-subplan extraction
+#
+# Across a batch of concurrent queries, repeated subtrees (a shared
+# selection feeding different aggregates, one join build probed by many
+# plans) are the units the semantic cache should hold with certainty
+# rather than speculation.  Nodes are frozen dataclasses, so a subtree IS
+# its own structural key; canonicalization folds filter-chain
+# permutations into one representative before counting.
+
+def common_subplans(nodes: Sequence[L.Node],
+                    min_count: int = 2) -> Dict[L.Node, int]:
+    """Subtrees occurring ``min_count``+ times across (already optimized)
+    plans, keyed by the canonical subtree.  Scan leaves are excluded —
+    column placements already dedup them — as are the roots themselves
+    (result-level caching owns whole plans)."""
+    counts: Dict[L.Node, int] = {}
+    roots = {L.canonicalize(n) for n in nodes}
+    for root in nodes:
+        for sub in L.walk(L.canonicalize(root)):
+            if isinstance(sub, L.Scan):
+                continue
+            counts[sub] = counts.get(sub, 0) + 1
+    return {n: c for n, c in counts.items()
+            if c >= min_count and n not in roots}
+
+
+def optimize_batch(nodes: Sequence[L.Node], stats: Dict[str, TableStats],
+                   model=None) -> Tuple[List[L.Node], Dict[L.Node, int]]:
+    """Optimize every plan of a batch, then extract the subtrees they
+    share — the serving front-end hints these to the semantic cache so
+    the first executor to materialize one admits it unconditionally."""
+    opt = [optimize(n, stats, model) for n in nodes]
+    return opt, common_subplans(opt)

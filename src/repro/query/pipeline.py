@@ -30,6 +30,8 @@ pair-list operator bit for bit.
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -68,20 +70,11 @@ class StreamPlan:
     join_nodes: Tuple[L.Join, ...] = ()
 
 
-def analyze(node: L.Node, stats: Dict[str, TableStats]
-            ) -> Optional[StreamPlan]:
-    """Whether a plan lowers onto a morsel pipeline, and its shape if so.
-
-    Streamable plans are aggregate-rooted probe spines: Scan ->
-    (Filter|FilterProject|Project)* with Joins whose build side is a
-    Scan.  Duplicate-keyed build sides are fine (bucket-weighted
-    aggregation) as long as their non-key columns are only read by the
-    final aggregate — a filter or join key above that reads a
-    multi-match column would need the materialized pair list, which is
-    exactly what a pipeline breaker avoids.
-    """
-    if not isinstance(node, L.Aggregate):
-        return None
+def _analyze_spine(node: L.Node, stats: Dict[str, TableStats]):
+    """Shared probe-spine analysis: Scan -> (Filter|FilterProject|
+    Project)* with Joins whose build side is a Scan.  Returns
+    (base_scan, breakers, join_nodes, dup_contributed, refs_above) or
+    None when the shape does not stream."""
     table_columns = {t: s.columns for t, s in stats.items()}
     breakers = []
     join_nodes = []
@@ -125,17 +118,69 @@ def analyze(node: L.Node, stats: Dict[str, TableStats]
             return
         ok[0] = False
 
-    visit(node.child)
+    visit(node)
     if not ok[0] or base_scan[0] is None or base_scan[0].table not in stats:
         return None
+    return (base_scan[0], tuple(breakers), tuple(join_nodes),
+            dup_contributed, refs_above)
+
+
+def analyze(node: L.Node, stats: Dict[str, TableStats]
+            ) -> Optional[StreamPlan]:
+    """Whether a plan lowers onto a morsel pipeline, and its shape if so.
+
+    Streamable plans are aggregate-rooted probe spines: Scan ->
+    (Filter|FilterProject|Project)* with Joins whose build side is a
+    Scan.  Duplicate-keyed build sides are fine (bucket-weighted
+    aggregation) as long as their non-key columns are only read by the
+    final aggregate — a filter or join key above that reads a
+    multi-match column would need the materialized pair list, which is
+    exactly what a pipeline breaker avoids.
+    """
+    if not isinstance(node, L.Aggregate):
+        return None
+    spine = _analyze_spine(node.child, stats)
+    if spine is None:
+        return None
+    scan, breakers, join_nodes, dup_contributed, refs_above = spine
     # multi-match columns may feed the aggregate, nothing per-row above
     if dup_contributed & set(refs_above):
         return None
-    scan = base_scan[0]
     stream_cols = scan.columns if scan.columns is not None \
         else tuple(stats[scan.table].columns)
-    return StreamPlan(node, scan, tuple(stream_cols), tuple(breakers),
-                      tuple(join_nodes))
+    return StreamPlan(node, scan, tuple(stream_cols), breakers, join_nodes)
+
+
+@dataclasses.dataclass
+class ProjectStreamPlan:
+    """A Project-rooted probe spine: the streamed form materializes one
+    compacted output chunk per morsel instead of folding a carry.  Only
+    unique-keyed build sides qualify — a multi-match join multiplies
+    rows, which a per-row output mask cannot express."""
+    node: L.Node                         # Project | FilterProject root
+    base_scan: L.Scan
+    stream_cols: Tuple[str, ...]
+    breakers: Tuple[BreakerSpec, ...]
+    join_nodes: Tuple[L.Join, ...]
+    out_cols: Tuple[str, ...]
+
+
+def analyze_project(node: L.Node, stats: Dict[str, TableStats]
+                    ) -> Optional[ProjectStreamPlan]:
+    """Whether a Project-rooted plan lowers onto a morsel pipeline whose
+    per-morsel product is a compacted chunk of the output table."""
+    if not isinstance(node, (L.Project, L.FilterProject)):
+        return None
+    spine = _analyze_spine(node, stats)
+    if spine is None:
+        return None
+    scan, breakers, join_nodes, _, _ = spine
+    if any(not b.unique for b in breakers):
+        return None
+    stream_cols = scan.columns if scan.columns is not None \
+        else tuple(stats[scan.table].columns)
+    return ProjectStreamPlan(node, scan, tuple(stream_cols), breakers,
+                             join_nodes, tuple(node.columns))
 
 
 @dataclasses.dataclass
@@ -302,13 +347,163 @@ def compile_pipeline(splan: StreamPlan, rows: int, agg_dtype, *,
         jax.jit(step, donate_argnums=donate), step, init, fin)
 
 
+@dataclasses.dataclass
+class CompiledProject:
+    """A Project-rooted plan shape compiled at one morsel granularity.
+    ``step`` maps one morsel to (mask, out_arrays): the live-row mask
+    after every filter and unique-join probe, and the projected columns
+    with joined build values gathered per row.  The driver compacts each
+    morsel's live rows into a chunk; chunks concatenated in morsel order
+    reproduce the eager output's row order exactly."""
+    base_table: str
+    stream_cols: Tuple[str, ...]
+    breakers: Tuple[BreakerSpec, ...]
+    rows: int
+    out_cols: Tuple[str, ...]
+    step: Callable
+    raw_step: Callable
+
+    @property
+    def n_build_arrays(self) -> int:
+        return sum(b.n_arrays for b in self.breakers)
+
+
+def compile_project_pipeline(pplan: ProjectStreamPlan, rows: int, *,
+                             impls: Tuple[str, ...] = (),
+                             trace_marker: Optional[Callable] = None
+                             ) -> CompiledProject:
+    """Lower a Project-rooted streamable plan into one jitted per-morsel
+    step producing (mask, out_cols).  Same argument layout and literal
+    discipline as ``compile_pipeline`` — range bounds stay traced, so the
+    serving streams share one compilation across member bounds."""
+    from repro.kernels.join.join import DEFAULT_BLOCK, probe_counts_pallas
+
+    breakers = pplan.breakers
+    probe_impls = tuple(
+        impls[i] if i < len(impls) and impls[i] == "pallas"
+        and rows % DEFAULT_BLOCK == 0 else "xla"
+        for i in range(len(breakers)))
+    n_build = sum(b.n_arrays for b in breakers)
+
+    def step(lits, n_valid, *arrays):
+        if trace_marker is not None:
+            trace_marker()
+        build_flat = arrays[:n_build]
+        morsel = arrays[n_build:]
+        valid = jnp.arange(rows, dtype=jnp.int32) < n_valid
+        lit_pos = [0]
+        breaker_pos = [0]
+
+        def next_lit():
+            v = lits[lit_pos[0]]
+            lit_pos[0] += 1
+            return v
+
+        def next_breaker():
+            i = breaker_pos[0]
+            breaker_pos[0] += 1
+            off = sum(b.n_arrays for b in breakers[:i])
+            b = breakers[i]
+            s_sorted, order = build_flat[off], build_flat[off + 1]
+            vals = dict(zip(b.value_cols, build_flat[off + 2:off + 2
+                                                     + len(b.value_cols)]))
+            return b, probe_impls[i], s_sorted, order, vals
+
+        def eval_node(n):
+            if isinstance(n, L.Scan):
+                return dict(zip(pplan.stream_cols, morsel)), valid
+            if isinstance(n, (L.Filter, L.FilterProject)):
+                cols, mask = eval_node(n.child)
+                lo, hi = next_lit(), next_lit()
+                mask = engine.select_range_morsel(cols[n.column], lo, hi,
+                                                  mask)
+                if isinstance(n, L.FilterProject):
+                    cols = {k: cols[k] for k in n.columns if k in cols}
+                return cols, mask
+            if isinstance(n, L.Project):
+                cols, mask = eval_node(n.child)
+                return {k: cols[k] for k in n.columns if k in cols}, mask
+            if isinstance(n, L.Join):
+                cols, mask = eval_node(n.left)
+                b, impl, s_sorted, order, vals = next_breaker()
+                keys = cols[n.on]
+                if impl == "pallas":
+                    start, cnt = probe_counts_pallas(s_sorted, keys,
+                                                     interpret=False)
+                else:
+                    start, cnt = join_ref.bucket_probe(s_sorted, keys)
+                mask = mask & (cnt > 0)
+                safe = jnp.clip(start, 0, s_sorted.shape[0] - 1)
+                s_idx = order[safe]
+                for c in b.value_cols:
+                    cols[c] = vals[c][s_idx]
+                return cols, mask
+            raise TypeError(n)
+
+        cols, mask = eval_node(pplan.node)
+        return mask, tuple(cols[c] for c in pplan.out_cols)
+
+    return CompiledProject(
+        pplan.base_scan.table, pplan.stream_cols, breakers, rows,
+        pplan.out_cols, jax.jit(step), step)
+
+
 def drive(cp: CompiledPipeline, n_morsels: int, get_morsel, build_flat,
-          lits, carry=None):
-    """Run the morsel loop with double buffering: morsel ``i+1``'s
-    placement transfer is dispatched (``get_morsel`` issues the async
-    ``jax.device_put``) before morsel ``i``'s step, so H2D staging
-    overlaps compute — the paper's transfer/compute overlap contract."""
+          lits, carry=None, *, prefetch: bool = True):
+    """Run the morsel loop with transfer/compute overlap.
+
+    With ``prefetch`` (the default) a background thread pulls morsels
+    ahead of the python dispatch loop through a small bounded queue, so
+    the host-side slicing + ``jax.device_put`` staging of morsel ``i+1``
+    runs while the main thread is still dispatching morsel ``i`` — H2D
+    genuinely overlaps python dispatch, not just device compute.
+    ``prefetch=False`` (or ``REPRO_OVERLAP=0`` via the executor) falls
+    back to the single-threaded double-buffered loop for determinism
+    debugging; both orders fold morsels identically, so results are
+    bit-identical either way."""
     carry = cp.init_carry() if carry is None else carry
+    if prefetch and n_morsels > 1:
+        buf: queue.Queue = queue.Queue(maxsize=2)
+        failure: list = []
+        stop = threading.Event()
+
+        def put(item) -> bool:
+            # bounded-wait put so a consumer that aborted (step raised)
+            # can always unblock the stage thread via ``stop`` — no
+            # thread or staged device buffers leak on the error path
+            while not stop.is_set():
+                try:
+                    buf.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def stage():
+            try:
+                for i in range(n_morsels):
+                    if not put(get_morsel(i)):
+                        return
+            except BaseException as e:            # noqa: BLE001
+                failure.append(e)
+                put(None)
+
+        t = threading.Thread(target=stage, daemon=True)
+        t.start()
+        try:
+            for _ in range(n_morsels):
+                item = buf.get()
+                if item is None:
+                    break
+                cur_arrays, n_valid = item
+                carry = cp.step(lits, carry, n_valid, *build_flat,
+                                *cur_arrays)
+        finally:
+            stop.set()
+            t.join()
+        if failure:
+            raise failure[0]
+        return carry
     nxt = get_morsel(0)
     for i in range(n_morsels):
         cur_arrays, n_valid = nxt

@@ -28,10 +28,13 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.columnar.table import Column, Table
 from repro.query import logical as L
 from repro.query import pipeline as pl
 from repro.query.exec import Executor
+from repro.query.optimize import common_subplans
 
 
 @dataclasses.dataclass
@@ -40,7 +43,7 @@ class QueryRecord:
     node: L.Node
     result: object = None
     latency_s: float = 0.0
-    path: str = "exec"              # exec | dedup | microbatch | stream
+    path: str = "exec"     # exec | dedup | microbatch | stream | cached
     t_submit: float = 0.0
 
 
@@ -66,12 +69,48 @@ class _StreamMember:
     authoritative while its group is unstacked (dirty); a clean group
     keeps every member's carry stacked on device between pumps."""
 
-    def __init__(self, rec: QueryRecord, lits, remaining: int):
+    def __init__(self, rec: QueryRecord, lits, remaining: int,
+                 fp: Optional[str] = None,
+                 dep_versions: Optional[Dict[str, int]] = None):
         self.rec = rec
         self.lits = lits
         self.carry = None
         self.remaining = remaining
+        self.fp = fp                    # semantic fingerprint (dedup key)
+        # table versions at attach: a mid-flight mutation makes the
+        # partially-folded carry meaningless, so the server restarts any
+        # member whose snapshot drifts
+        self.dep_versions = dep_versions or {}
         self.dups: List[QueryRecord] = []
+
+
+class _ProjectMember:
+    """One Project-rooted query riding a morsel stream: each advance
+    compacts the morsel's surviving rows into a host-side chunk keyed by
+    ABSOLUTE morsel index, so a member that joined mid-circle still
+    reassembles its output in table order — bit-identical to the eager
+    materialization."""
+
+    def __init__(self, rec: QueryRecord, cpj, builds, lits, remaining: int,
+                 fp: Optional[str],
+                 dep_versions: Optional[Dict[str, int]] = None):
+        self.rec = rec
+        self.cpj = cpj
+        self.builds = builds
+        self.lits = lits
+        self.chunks: Dict[int, Dict[str, np.ndarray]] = {}
+        self.remaining = remaining
+        self.fp = fp
+        self.dep_versions = dep_versions or {}
+        self.dups: List[QueryRecord] = []
+
+    def finalize(self) -> Table:
+        order = sorted(self.chunks)
+        cols = {}
+        for c in self.cpj.out_cols:
+            cols[c] = Column(jnp.asarray(np.concatenate(
+                [self.chunks[i][c] for i in order])), c)
+        return Table("proj", cols)
 
 
 class _Group:
@@ -130,28 +169,52 @@ class _MorselStream:
         self.spec = spec
         self.pos = 0
         self.groups: Dict[int, _Group] = {}
+        self.proj_members: List[_ProjectMember] = []
 
     def members(self):
         for g in self.groups.values():
             yield from g.members
+        yield from self.proj_members
 
-    def attach(self, rec: QueryRecord, cp, builds, lits) -> _StreamMember:
+    def attach(self, rec: QueryRecord, cp, builds, lits,
+               fp: Optional[str] = None,
+               dep_versions: Optional[Dict[str, int]] = None
+               ) -> _StreamMember:
         g = self.groups.get(id(cp))
         if g is None:
             g = self.groups[id(cp)] = _Group(cp, builds)
+        else:
+            # the group can outlive a build-side mutation (same compiled
+            # pipeline, new version-keyed build arrays): always take the
+            # caller's fresh builds — any member folded against the old
+            # ones was already detached by the restart sweep
+            g.builds = builds
         g.writeback()
-        m = _StreamMember(rec, lits, self.spec.n_morsels)
+        m = _StreamMember(rec, lits, self.spec.n_morsels, fp,
+                          dep_versions)
         m.carry = cp.init_carry()
         g.members.append(m)
         return m
 
+    def attach_project(self, rec: QueryRecord, cpj, builds, lits,
+                       fp: Optional[str],
+                       dep_versions: Optional[Dict[str, int]] = None
+                       ) -> _ProjectMember:
+        m = _ProjectMember(rec, cpj, builds, lits, self.spec.n_morsels,
+                           fp, dep_versions)
+        self.proj_members.append(m)
+        return m
+
     def advance(self) -> Dict[int, object]:
         """Process one morsel for every member — one dispatch per group."""
-        if not any(g.members for g in self.groups.values()):
+        if not any(g.members for g in self.groups.values()) \
+                and not self.proj_members:
             return {}
         ex = self.server.executor
-        union = tuple(sorted({c for g in self.groups.values() if g.members
-                              for c in g.cp.stream_cols}))
+        union = tuple(sorted(
+            {c for g in self.groups.values() if g.members
+             for c in g.cp.stream_cols}
+            | {c for m in self.proj_members for c in m.cpj.stream_cols}))
         cache_ok = ex.placement_capacity_bytes is None
         arrays, n_valid = ex._stream_morsel(self.table, union, self.spec,
                                             self.pos, cache_ok)
@@ -173,29 +236,62 @@ class _MorselStream:
                 m.remaining -= 1
             if any(m.remaining <= 0 for m in g.members):
                 self._complete(g, done)
+        still = []
+        for m in self.proj_members:
+            cols = tuple(by_col[c] for c in m.cpj.stream_cols)
+            mask, outs = m.cpj.step(m.lits, n_valid, *m.builds, *cols)
+            live = np.asarray(mask)
+            m.chunks[self.pos] = {
+                c: np.asarray(arr)[live]
+                for c, arr in zip(m.cpj.out_cols, outs)}
+            m.remaining -= 1
+            if m.remaining > 0:
+                still.append(m)
+            else:
+                self._complete_project(m, done)
+        self.proj_members = still
         self.pos = (self.pos + 1) % self.spec.n_morsels
         return done
 
+    def _complete_project(self, m: _ProjectMember,
+                          done: Dict[int, object]):
+        self._finish_member(m, m.finalize(), done)
+
     def _complete(self, g: _Group, done: Dict[int, object]):
         g.writeback()
-        now = time.perf_counter()
         still = []
         for m in g.members:
             if m.remaining > 0:
                 still.append(m)
                 continue
-            m.rec.result = g.cp.finalize(m.carry)
-            m.rec.latency_s = now - m.rec.t_submit
-            m.rec.path = "stream"
-            self.server.history.append(m.rec)
-            self.server.n_streamed += 1
-            done[m.rec.qid] = m.rec.result
-            for dup in m.dups:
-                dup.result = m.rec.result
-                dup.latency_s = now - dup.t_submit
-                self.server.history.append(dup)
-                done[dup.qid] = dup.result
+            self._finish_member(m, g.cp.finalize(m.carry), done)
         g.members = still
+
+    def _finish_member(self, m, result, done: Dict[int, object]):
+        """Shared completion bookkeeping for aggregate and project
+        members: stamp latencies, fan the result out to dedup riders,
+        and offer it to the result cache — the next submission of this
+        query then finishes at admission.  The fingerprint guard skips
+        admission if any dependency version moved mid-flight (the
+        restart sweep normally catches that first; this is the
+        completion-time check)."""
+        now = time.perf_counter()
+        m.rec.result = result
+        m.rec.latency_s = now - m.rec.t_submit
+        m.rec.path = "stream"
+        self.server.history.append(m.rec)
+        self.server.n_streamed += 1
+        done[m.rec.qid] = result
+        for dup in m.dups:
+            dup.result = result
+            dup.latency_s = now - dup.t_submit
+            self.server.history.append(dup)
+            done[dup.qid] = result
+        ex = self.server.executor
+        if ex.cache is not None and \
+                m.fp == ex.fingerprint_of(m.rec.node):
+            opt, phys = ex.plan(m.rec.node)
+            ex._admit_result(m.rec.node, opt, phys, result)
 
 
 class QueryServer:
@@ -216,6 +312,8 @@ class QueryServer:
         self.n_deduped = 0
         self.n_microbatched = 0
         self.n_streamed = 0
+        self.n_cached = 0               # served whole from the semantic cache
+        self.n_subplan_shared = 0       # CSE-hinted shared subtrees
         self.n_batches = 0
         self._batched_fns: Dict[tuple, object] = {}
         self.batched_cache_hits = 0
@@ -261,9 +359,11 @@ class QueryServer:
         every stream one morsel.  Returns newly completed results, so
         callers see completions continuously rather than per admission
         batch."""
+        self._restart_stale_members()
         with self._lock:
             batch, self._pending = self._pending, []
         t0 = time.perf_counter()
+        self._hint_shared(batch)
         done: Dict[int, object] = {}
         ran: Dict[L.Node, QueryRecord] = {}   # non-streamable dedup
         for rec in batch:
@@ -282,9 +382,12 @@ class QueryServer:
                 self.history.append(rec)
                 done[rec.qid] = rec.result
                 continue
+            if self._serve_cached(rec, done):
+                continue
             if self._try_attach(rec):
                 continue
-            rec.result = self.executor.execute(rec.node).value
+            res = self.executor.execute(rec.node)
+            rec.result = res.value
             rec.latency_s = time.perf_counter() - rec.t_submit
             self.history.append(rec)
             done[rec.qid] = rec.result
@@ -294,34 +397,134 @@ class QueryServer:
         self._total_drain_s += time.perf_counter() - t0
         return done
 
+    def _serve_cached(self, rec: QueryRecord, done: Dict[int, object]
+                      ) -> bool:
+        """Whole-result semantic-cache hit: the query completes at
+        admission, before it could occupy a stream or an executor call."""
+        ex = self.executor
+        if ex.cache is None:
+            return False
+        entry = ex.cache.get(("result", ex.fingerprint_of(rec.node)))
+        if entry is None:
+            return False
+        ex.result_hits += 1
+        rec.result = entry.value
+        rec.latency_s = time.perf_counter() - rec.t_submit
+        rec.path = "cached"
+        self.n_cached += 1
+        self.history.append(rec)
+        done[rec.qid] = rec.result
+        return True
+
+    def _hint_shared(self, batch: List[QueryRecord]) -> None:
+        """Optimizer CSE over the admitted batch: subtrees repeated
+        across these queries are certain to be reused, so they are
+        hinted to the semantic cache (admitted as if already hit) before
+        the first member executes."""
+        ex = self.executor
+        if ex.cache is None or len(batch) < 2:
+            return
+        opts = [ex.plan(rec.node)[0] for rec in batch]
+        # only node kinds the executor actually caches as subplans —
+        # hinting anything else would be a dead key
+        shared = [n for n in common_subplans(opts)
+                  if isinstance(n, (L.Filter, L.FilterProject, L.Join))]
+        if not shared:
+            return
+        versions = ex.catalog.versions()
+        ex.cache.hint(
+            ("subplan", L.fingerprint(n, versions, order_sensitive=True))
+            for n in shared)
+        self.n_subplan_shared += len(shared)
+
     def _find_inflight(self, node: L.Node) -> Optional[_StreamMember]:
+        """In-flight dedup at SEMANTIC level: a submitted query joins an
+        in-flight member when their canonical fingerprints match, not
+        just when the trees are structurally identical — filter-order
+        permutations and agg-rooted join swaps share one stream slot."""
+        ex = self.executor
+        fp = ex.fingerprint_of(node) if ex.cache is not None else None
         for stream in self._streams.values():
             for m in stream.members():
-                if m.rec.node == node:
+                if m.rec.node == node or (fp is not None and m.fp == fp):
                     return m
         return None
 
     def _try_attach(self, rec: QueryRecord) -> bool:
         ex = self.executor
         node, phys = ex.plan(rec.node)        # memoized per logical node
+        fp = ex.fingerprint_of(rec.node) if ex.cache is not None else None
+        versions = ex.catalog.versions()
+        deps = {t: versions.get(t, 0) for t in L.tables_of(node)}
         splan = pl.analyze(node, ex.catalog.stats)
-        if splan is None:
+        if splan is not None:
+            table = splan.base_scan.table
+            stream = self._stream_for(table, phys,
+                                      len(splan.stream_cols))
+            cp, builds, _ = ex.stream_pipeline(node, phys, splan,
+                                               stream.spec)
+            lits = jnp.asarray(L.literals(node), jnp.int32)
+            stream.attach(rec, cp, builds, lits, fp, deps)
+            return True
+        pplan = pl.analyze_project(node, ex.catalog.stats)
+        if pplan is None:
             return False
-        table = splan.base_scan.table
-        stream = self._streams.get(table)
-        if stream is None:
-            spec = ex.morsel_spec(table, self.morsel_rows
-                                  or phys.morsel_rows,
-                                  n_cols=len(splan.stream_cols))
-            stream = self._streams[table] = _MorselStream(self, table, spec)
-        cp, builds, _ = ex.stream_pipeline(node, phys, splan, stream.spec)
+        table = pplan.base_scan.table
+        stream = self._stream_for(table, phys, len(pplan.stream_cols))
+        cpj, builds = ex.project_pipeline(node, phys, pplan, stream.spec)
         lits = jnp.asarray(L.literals(node), jnp.int32)
-        stream.attach(rec, cp, builds, lits)
+        stream.attach_project(rec, cpj, builds, lits, fp, deps)
         return True
 
+    def _restart_stale_members(self) -> None:
+        """A table mutation mid-flight invalidates every member whose
+        dependency snapshot drifted: their partially-folded carries mix
+        pre- and post-mutation morsels, and their compiled builds are
+        stale.  Such members are detached and REQUEUED ahead of the next
+        admission batch, so they re-plan, re-attach against fresh builds
+        and statistics, and restart their circle — and any structural
+        dedup against them can only ever see current-version state."""
+        ex = self.executor
+        versions = ex.catalog.versions()
+
+        def stale(m) -> bool:
+            return any(versions.get(t, 0) != v
+                       for t, v in m.dep_versions.items())
+
+        requeue: List[QueryRecord] = []
+        for stream in self._streams.values():
+            for g in stream.groups.values():
+                hit = [m for m in g.members if stale(m)]
+                if not hit:
+                    continue
+                g.writeback()
+                for m in hit:
+                    g.members.remove(m)
+                    requeue.append(m.rec)
+                    requeue.extend(d for d in m.dups)
+            hit_p = [m for m in stream.proj_members if stale(m)]
+            for m in hit_p:
+                stream.proj_members.remove(m)
+                requeue.append(m.rec)
+                requeue.extend(d for d in m.dups)
+        if requeue:
+            with self._lock:
+                self._pending = requeue + self._pending
+
+    def _stream_for(self, table: str, phys, n_cols: int) -> _MorselStream:
+        stream = self._streams.get(table)
+        if stream is None:
+            ex = self.executor
+            spec = ex.morsel_spec(table, self.morsel_rows
+                                  or (phys.morsel_rows if phys else None),
+                                  n_cols=n_cols)
+            stream = self._streams[table] = _MorselStream(self, table, spec)
+        return stream
+
     def _inflight(self) -> bool:
-        return any(g.members for s in self._streams.values()
-                   for g in s.groups.values())
+        return any(s.proj_members or
+                   any(g.members for g in s.groups.values())
+                   for s in self._streams.values())
 
     def _drain_streaming(self) -> Dict[int, object]:
         out: Dict[int, object] = {}
@@ -343,6 +546,7 @@ class QueryServer:
         if not batch:
             return {}
         t0 = time.perf_counter()
+        self._hint_shared(batch)
 
         # 1. dedup identical plans (frozen nodes hash structurally)
         first_of: Dict[L.Node, QueryRecord] = {}
@@ -372,11 +576,16 @@ class QueryServer:
                 continue
             self._run_microbatch(key, recs)
 
-        # 3. the rest, one executor call each (plan cache still applies)
+        # 3. the rest, one executor call each (plan cache still applies;
+        # a semantic-cache hit skips execution entirely)
         for rec in singles:
             t = time.perf_counter()
-            rec.result = self.executor.execute(rec.node).value
+            res = self.executor.execute(rec.node)
+            rec.result = res.value
             rec.latency_s = time.perf_counter() - t
+            if res.result_cache_hit:
+                rec.path = "cached"
+                self.n_cached += 1
 
         for rec, src in dups:
             rec.result = src.result
@@ -438,6 +647,8 @@ class QueryServer:
             "n_deduped": self.n_deduped,
             "n_microbatched": self.n_microbatched,
             "n_streamed": self.n_streamed,
+            "n_cached": self.n_cached,
+            "n_subplan_shared": self.n_subplan_shared,
             "n_microbatches": self.n_batches,
             "batched_kernel_cache_hits": self.batched_cache_hits,
             "total_serve_s": self._total_drain_s,
