@@ -16,6 +16,15 @@ ROADMAP's many-user north star implies):
     bytes), not thrash or fail.
   * **mutation differential** — a base-table mutation mid-workload must
     produce results bit-identical to cache-disabled execution.
+  * **subsumption sweep** — a narrowing range ladder over one hot
+    column: every rung after the first must be served by REFINING the
+    previous rung's bitmap (subsumption hit), streaming bitmap bytes
+    instead of base-column bytes; refine latency vs recompute latency
+    is reported, and refine is chosen only where ``refine_price`` wins.
+  * **shared cache (2 executors)** — tenant A warms results and a
+    superset bitmap, tenant B must hit/refine through the SAME
+    ``SemanticCache``; a mutation by B must leave A bit-identical to
+    cache-disabled execution.
 
     PYTHONPATH=src python benchmarks/bench_cache.py [--smoke]
 """
@@ -27,12 +36,13 @@ import time
 
 
 def main(out_path: str = "BENCH_cache.json", *, n_rows: int = 1 << 16,
-         smoke: bool = False) -> dict:
+         smoke: bool = False, write: bool = True) -> dict:
     sys.path.insert(0, "src")
+    import jax
     import numpy as np
     from repro.columnar.table import Table
     from repro.query import Catalog, CostModel, Executor, Q, QueryServer, \
-        load_calibration
+        SemanticCache, load_calibration
 
     if smoke:
         n_rows = 1 << 13
@@ -52,11 +62,11 @@ def main(out_path: str = "BENCH_cache.json", *, n_rows: int = 1 << 16,
                     "n_queries": n_queries,
                     "calibrated": calibration is not None}
 
-    def make_executor(**kw):
-        n_eng = len(__import__("jax").devices())
-        return Executor(catalog,
-                        cost_model=CostModel(n_eng,
-                                             calibration=calibration), **kw)
+    n_eng = len(jax.devices())
+
+    def make_executor(cat=catalog, **kw):
+        return Executor(cat, cost_model=CostModel(
+            n_eng, calibration=calibration), **kw)
 
     # distinct join+filter+aggregate templates (distinct bounds => distinct
     # fingerprints; one shared compilation since bounds are traced)
@@ -177,8 +187,84 @@ def main(out_path: str = "BENCH_cache.json", *, n_rows: int = 1 << 16,
         "invalidated_entries": ex_cached.cache.invalidated,
     }
 
-    with open(out_path, "w") as f:
-        json.dump(report, f, indent=2)
+    # --- predicate subsumption: narrowing range ladder -----------------------
+    # each rung halves the previous width (same lo), so the tightest
+    # cached superset is always the previous rung: N-1 refinements, each
+    # streaming ~3x the parent bitmap instead of the full base column
+    cat2 = Catalog.from_tables(lineitem, orders)
+    widths = [2800, 1400, 700, 350, 175] if smoke \
+        else [2800, 1400, 700, 350, 175, 87, 43]
+    ladder = [Q.scan("lineitem").filter("price", 100, 100 + w)
+               .project("orderkey", "quantity") for w in widths]
+    ex_sub = make_executor(cat2, cache_bytes=64 << 20)
+    ex_plain2 = make_executor(cat2)
+    for q in ladder:                      # warm compile caches (both)
+        ex_plain2.execute(q)
+    t0 = time.perf_counter()
+    for q in ladder:
+        ex_plain2.execute(q)
+    t_recompute = time.perf_counter() - t0
+    ex_sub.execute(ladder[0])             # seed the widest bitmap
+    t0 = time.perf_counter()
+    for q in ladder[1:]:
+        ex_sub.execute(q)
+    t_refine = time.perf_counter() - t0
+    n_refines = len(ladder) - 1
+    refine_speedup = (t_recompute * n_refines / len(ladder)) \
+        / max(t_refine, 1e-9)
+    report["subsumption"] = {
+        "ladder_widths": widths,
+        "subsumption_hits": ex_sub.subsumption_hits,
+        "subsumption_hit_rate": round(
+            ex_sub.subsumption_hits / n_refines, 3),
+        "refine_wall_ms": round(t_refine * 1e3, 2),
+        "recompute_wall_ms": round(t_recompute * 1e3, 2),
+        "refine_vs_recompute_speedup": round(refine_speedup, 2),
+        "bitmap_bytes_streamed": ex_sub.refine_bytes_streamed,
+        "column_bytes_avoided": ex_sub.refine_bytes_avoided,
+        "bytes_moved_ratio": round(
+            ex_sub.refine_bytes_streamed
+            / max(ex_sub.refine_bytes_avoided, 1), 4),
+        "refine_only_when_priced": bool(
+            ex_sub.subsumption_hits == n_refines),
+    }
+
+    # --- shared cache: two executors, one budget -----------------------------
+    shared = SemanticCache(64 << 20, model=ex_sub.cost_model)
+    ex_a = make_executor(cat2, semantic_cache=shared)
+    ex_b = make_executor(cat2, semantic_cache=shared)
+    shared_templates = templates[:8]
+    for q in shared_templates:            # tenant A warms
+        ex_a.execute(q)
+    t0 = time.perf_counter()
+    for q in shared_templates:            # tenant B must hit
+        ex_b.execute(q)
+    t_b = time.perf_counter() - t0
+    ex_a.execute(ladder[0])               # A's superset bitmap...
+    ex_b.execute(ladder[1])               # ...refines B's narrower range
+    cross_hits = ex_b.result_hits
+    # mutation by B: A's next read differential vs cache-disabled
+    cat2.update_column(
+        "lineitem", "quantity",
+        rng.integers(1, 50, size=n_rows).astype(np.int32))
+    a_after = ex_a.execute(shared_templates[0])
+    plain_after = make_executor(cat2).execute(shared_templates[0]).value
+    report["shared_cache"] = {
+        "templates": len(shared_templates),
+        "cross_executor_hits": cross_hits,
+        "cross_executor_hit_rate": round(
+            cross_hits / len(shared_templates), 3),
+        "tenant_b_wall_ms": round(t_b * 1e3, 2),
+        "cross_executor_subsumption_hits": ex_b.subsumption_hits,
+        "post_mutation_identical_to_disabled":
+            a_after.value == plain_after,
+        "post_mutation_served_stale": bool(a_after.result_cache_hit),
+        "shared_invalidated_entries": shared.invalidated,
+    }
+
+    if write:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
     print(json.dumps(report, indent=2))
     return report
 
@@ -205,7 +291,31 @@ def cache_figures():
     rows.append(("cache_mutation_differential", 0.0,
                  f"identical={m['post_mutation_identical_to_disabled']},"
                  f"stale_served={m['served_stale']}"))
+    rows.extend(_subsumption_rows(rep))
     return rows
+
+
+def _subsumption_rows(rep):
+    s = rep["subsumption"]
+    sh = rep["shared_cache"]
+    return [
+        ("cache_subsumption_ladder", 0.0,
+         f"hit_rate={s['subsumption_hit_rate']},"
+         f"refine_speedup={s['refine_vs_recompute_speedup']}x,"
+         f"bytes_ratio={s['bytes_moved_ratio']}"),
+        ("cache_shared_two_executors", 0.0,
+         f"cross_hit_rate={sh['cross_executor_hit_rate']},"
+         f"mutation_identical="
+         f"{sh['post_mutation_identical_to_disabled']}"),
+    ]
+
+
+def subsumption_smoke():
+    """run.py --smoke hook: the subsumption sweep + shared-cache
+    scenario at smoke scale.  Never writes BENCH_cache.json (the
+    committed file stays full-scale; ``bench_cache.py --smoke`` is the
+    CI entry point that does write its own)."""
+    return _subsumption_rows(main(smoke=True, write=False))
 
 
 if __name__ == "__main__":

@@ -14,7 +14,7 @@ def main() -> None:
     sys.path.insert(0, os.path.join(_ROOT, "src"))
     sys.path.insert(0, _ROOT)
     from benchmarks.paper_figures import ALL
-    from benchmarks.bench_cache import cache_figures
+    from benchmarks.bench_cache import cache_figures, subsumption_smoke
     from benchmarks.bench_join_duplicates import join_duplicates
     from benchmarks.calibrate import calibrate
     smoke = "--smoke" in sys.argv
@@ -31,8 +31,10 @@ def main() -> None:
     # cover the smoke case
     fns = ALL + [join_duplicates, cache_figures]
     if smoke:
+        # subsumption_smoke exercises the refine path + shared cache at
+        # smoke scale without clobbering the committed BENCH_cache.json
         fns = [fn for fn in ALL if fn.__name__ in
-               ("fig2_bandwidth", "tab3_roofline")]
+               ("fig2_bandwidth", "tab3_roofline")] + [subsumption_smoke]
     if only:
         fns = [fn for fn in fns if only in fn.__name__]
 

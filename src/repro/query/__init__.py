@@ -12,8 +12,9 @@ layer of the paper, grown into a subsystem).
 """
 from repro.query.logical import (                                # noqa: F401
     Aggregate, Filter, FilterProject, Join, Node, Project, Q, Scan,
-    TrainGLM, canonicalize, fingerprint, literals, output_columns,
-    pformat, signature, tables_of, walk,
+    SelectionInterval, TrainGLM, canonicalize, fingerprint, literals,
+    output_columns, pformat, selection_interval, signature,
+    subsumption_key, tables_of, walk,
 )
 from repro.query.cache import CacheEntry, SemanticCache          # noqa: F401
 from repro.query.cost import (                                   # noqa: F401

@@ -20,13 +20,42 @@ the cache keeps what is expensive to rebuild, not what is big.  An entry
 is admitted only by evicting strictly lower-scored residents; if the
 bytes cannot be freed that way, the candidate is rejected instead of
 churning more valuable state.
+
+Beyond exact-fingerprint hits, selection bitmaps support **predicate
+subsumption**: every admitted bitmap registers its CLOSED interval
+``[lo, hi]`` in an index bucketed by ``(table, column, version)``, and
+``lookup_superset`` returns the TIGHTEST cached interval containing a
+requested range — the executor then refines that bitmap (stream the
+cached index, not the base column) when the cost model says refinement
+wins.  Version lives inside the bucket key, so a mutation makes a stale
+bucket unreachable; ``invalidate_table``/``sync_versions`` sweep it too
+so dead interval metadata never outlives its entries.
+
+The cache may be SHARED by several executors over one catalog (the
+multi-tenant posture: Wang et al. show effective HBM bandwidth collapses
+under uncoordinated concurrent access, so tenants should share one
+budgeted materialization pool instead of each re-streaming the base
+columns).  All mutating surfaces take one re-entrant lock, and
+``sync_versions`` is the drift guard: any executor that notices a table
+version move sweeps everyone's dependent entries.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Hashable, Iterable, Optional, Tuple
+import os
+import threading
+from typing import Dict, Hashable, Iterable, Mapping, Optional, Tuple
 
 DEFAULT_BUDGET_BYTES = 64 << 20          # 64 MiB of materialized state
+
+
+def cache_disabled() -> bool:
+    """The REPRO_CACHE=0 kill-switch: force-disables the semantic cache
+    everywhere (Executor construction, server installation, and the test
+    suite's ``requires_cache`` skips) — ONE parse so the CI cache-off leg
+    and the runtime gates can never disagree."""
+    return os.environ.get("REPRO_CACHE", "1").lower() in ("0", "off",
+                                                          "no")
 
 
 @dataclasses.dataclass
@@ -39,6 +68,8 @@ class CacheEntry:
     tables: Tuple[str, ...]              # dependency sweep index
     hits: int = 0
     tick: int = 0                        # last-touch order (LRU tiebreak)
+    # (table, column, version, lo, hi) for interval-indexed bitmaps
+    interval: Optional[Tuple[str, str, int, int, int]] = None
 
     def score(self, model) -> float:
         return model.cache_score(self.recompute_s, self.n_bytes,
@@ -61,7 +92,17 @@ class SemanticCache:
         self.model = model
         self.budget_bytes = int(budget_bytes)
         self._entries: Dict[Hashable, CacheEntry] = {}
+        # (table, column, version) -> {entry key: (lo, hi)} — the
+        # subsumption index over admitted selection bitmaps
+        self._intervals: Dict[Tuple[str, str, int],
+                              Dict[Hashable, Tuple[int, int]]] = {}
         self._hinted: set = set()
+        # one lock for every mutating surface: the cache is shared
+        # across executors (and the streaming server pumps while other
+        # threads admit/evict), so index and byte accounting must never
+        # be observed mid-update
+        self._lock = threading.RLock()
+        self._seen_versions: Dict[str, int] = {}
         self._tick = 0
         self.used_bytes = 0
         self.hits = 0
@@ -70,29 +111,95 @@ class SemanticCache:
         self.rejected = 0
         self.evicted = 0
         self.invalidated = 0
+        self.subsumption_hits = 0
+        self.subsumption_misses = 0
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __contains__(self, key: Hashable) -> bool:
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
     # -- lookup ------------------------------------------------------------- #
 
     def get(self, key: Hashable) -> Optional[CacheEntry]:
-        e = self._entries.get(key)
-        if e is None:
-            self.misses += 1
-            return None
-        self.hits += 1
-        e.hits += 1
-        self._tick += 1
-        e.tick = self._tick
-        return e
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            e.hits += 1
+            self._tick += 1
+            e.tick = self._tick
+            return e
 
     def peek(self, key: Hashable) -> Optional[CacheEntry]:
         """Lookup without touching hit/recency accounting."""
-        return self._entries.get(key)
+        with self._lock:
+            return self._entries.get(key)
+
+    def lookup_superset(self, table: str, column: str, version: int,
+                        lo: int, hi: int, accept=None
+                        ) -> Optional[Tuple[CacheEntry, Tuple[int, int]]]:
+        """Subsumption lookup: the TIGHTEST cached selection bitmap whose
+        closed interval contains ``[lo, hi]`` over this exact
+        ``(table, column, version)``.  "Tightest" = smallest span, ties
+        broken by most-recent touch, so a narrowing ladder of queries
+        always refines from the narrowest ancestor still resident (the
+        fewest bytes to stream).  An empty request (``lo > hi``) is
+        contained in any cached interval.  ``accept`` (entry -> bool)
+        filters candidates BEFORE anything is counted — the executor
+        passes its pricing gate here, so a superset too wide to be worth
+        refining never registers a subsumption hit or a recency touch.
+        Returns ``(entry, (clo, chi))`` or None; a returned entry's
+        hit/recency accounting is touched exactly like an exact hit."""
+        with self._lock:
+            found = self._best_superset_locked(table, column, version,
+                                               lo, hi, accept)
+            if found is None:
+                self.subsumption_misses += 1
+                return None
+            best_key, bounds = found
+            self.subsumption_hits += 1
+            entry = self.get(best_key)
+            return entry, bounds
+
+    def peek_superset(self, table: str, column: str, version: int,
+                      lo: int, hi: int, accept=None
+                      ) -> Optional[Tuple[CacheEntry, Tuple[int, int]]]:
+        """``lookup_superset`` without touching hit/recency/subsumption
+        accounting — the executor's routing probe (decide whether to
+        abandon a fused scan) before the real lookup counts anything."""
+        with self._lock:
+            found = self._best_superset_locked(table, column, version,
+                                               lo, hi, accept)
+            if found is None:
+                return None
+            key, bounds = found
+            return self._entries[key], bounds
+
+    def _best_superset_locked(self, table, column, version, lo, hi,
+                              accept=None):
+        bucket = self._intervals.get((table, column, int(version)))
+        best_key, best = None, None
+        if bucket:
+            for key, (clo, chi) in bucket.items():
+                if not (lo > hi or (clo <= lo and chi >= hi)):
+                    continue
+                e = self._entries.get(key)
+                if e is None:          # defensive: index is swept on drop
+                    continue
+                if accept is not None and not accept(e):
+                    continue
+                cand = (chi - clo, -e.tick)
+                if best is None or cand < best:
+                    best, best_key = cand, key
+        if best_key is None:
+            return None
+        return best_key, bucket[best_key]
 
     # -- admission / eviction ------------------------------------------------ #
 
@@ -104,12 +211,25 @@ class SemanticCache:
         REPLACES the hint set — hints describe one admission batch, so
         unconsumed leftovers from a previous batch are dropped rather
         than accumulated forever."""
-        self._hinted = set(keys)
+        with self._lock:
+            self._hinted = set(keys)
 
     def put(self, key: Hashable, value: object, *, kind: str,
             n_bytes: int, recompute_s: float,
-            tables: Iterable[str] = ()) -> bool:
-        """Priced admission.  Returns whether the entry was admitted."""
+            tables: Iterable[str] = (),
+            interval: Optional[Tuple[str, str, int, int, int]] = None
+            ) -> bool:
+        """Priced admission.  Returns whether the entry was admitted.
+        ``interval=(table, column, version, lo, hi)`` registers a
+        selection bitmap in the subsumption index, making it a candidate
+        superset for narrower lookups at the same version."""
+        with self._lock:
+            return self._put_locked(key, value, kind=kind, n_bytes=n_bytes,
+                                    recompute_s=recompute_s, tables=tables,
+                                    interval=interval)
+
+    def _put_locked(self, key, value, *, kind, n_bytes, recompute_s,
+                    tables, interval) -> bool:
         n_bytes = max(int(n_bytes), 0)
         if n_bytes > self.budget_bytes:
             self.rejected += 1
@@ -121,7 +241,8 @@ class SemanticCache:
         if old is not None:
             self._drop(old)
         cand = CacheEntry(key, kind, value, n_bytes, recompute_s,
-                          tuple(tables), hits=1 if hinted else 0)
+                          tuple(tables), hits=1 if hinted else 0,
+                          interval=interval)
         score = cand.score(self.model)
         need = self.used_bytes + n_bytes - self.budget_bytes
         victims = []
@@ -148,37 +269,82 @@ class SemanticCache:
         self._entries[key] = cand
         self.used_bytes += n_bytes
         self.admitted += 1
+        if interval is not None:
+            table, column, version, lo, hi = interval
+            self._intervals.setdefault(
+                (table, column, int(version)), {})[key] = (int(lo), int(hi))
         return True
 
     def _drop(self, e: CacheEntry) -> None:
         del self._entries[e.key]
         self.used_bytes -= e.n_bytes
+        if e.interval is not None:
+            table, column, version, _, _ = e.interval
+            bucket = self._intervals.get((table, column, int(version)))
+            if bucket is not None:
+                bucket.pop(e.key, None)
+                if not bucket:
+                    del self._intervals[(table, column, int(version))]
 
     # -- invalidation --------------------------------------------------------- #
 
     def invalidate_table(self, table: str) -> int:
         """Sweep every entry that depends on ``table``.  Version-embedded
         fingerprints already make them unreachable — this frees their
-        bytes so dead state never wins eviction fights."""
-        stale = [e for e in self._entries.values() if table in e.tables]
-        for e in stale:
-            self._drop(e)
-        self.invalidated += len(stale)
-        return len(stale)
+        bytes so dead state never wins eviction fights.  The interval
+        index is swept with them: a stale bucket (old version in its key)
+        is unreachable but would otherwise leak interval metadata."""
+        with self._lock:
+            stale = [e for e in self._entries.values()
+                     if table in e.tables]
+            for e in stale:
+                self._drop(e)
+            # _drop clears live buckets entry-by-entry; old-version
+            # buckets whose entries were dropped under a different
+            # dependency path are removed wholesale here
+            self._intervals = {k: v for k, v in self._intervals.items()
+                               if k[0] != table}
+            self.invalidated += len(stale)
+            return len(stale)
+
+    def sync_versions(self, versions: Mapping[str, int]) -> int:
+        """Cross-executor drift guard: sweep every table whose version
+        moved since this cache last saw it.  Several executors over one
+        catalog share one cache; whichever notices a mutation first (its
+        own ``update_column`` or another tenant's) sweeps the shared
+        entries for everyone — fingerprint embedding already made them
+        unreachable, this reclaims their bytes exactly once."""
+        swept = 0
+        with self._lock:
+            for table, version in versions.items():
+                seen = self._seen_versions.get(table)
+                if seen is not None and seen != version:
+                    swept += self.invalidate_table(table)
+                self._seen_versions[table] = version
+        return swept
 
     def clear(self) -> None:
-        self._entries.clear()
-        self._hinted.clear()
-        self.used_bytes = 0
+        with self._lock:
+            self._entries.clear()
+            self._intervals.clear()
+            self._hinted.clear()
+            self.used_bytes = 0
 
     # -- reporting ------------------------------------------------------------ #
 
     def stats_dict(self) -> dict:
+        with self._lock:
+            return self._stats_locked()
+
+    def _stats_locked(self) -> dict:
         total = self.hits + self.misses
         by_kind: Dict[str, int] = {}
         for e in self._entries.values():
             by_kind[e.kind] = by_kind.get(e.kind, 0) + 1
         return {
+            "semantic_cache_subsumption_hits": self.subsumption_hits,
+            "semantic_cache_subsumption_misses": self.subsumption_misses,
+            "semantic_cache_interval_buckets": len(self._intervals),
             "semantic_cache_entries": len(self._entries),
             "semantic_cache_entries_by_kind": by_kind,
             "semantic_cache_used_bytes": self.used_bytes,

@@ -270,6 +270,36 @@ class CostModel:
         return max(recompute_s, 0.0) * (1.0 + hits) \
             / max(float(n_bytes), 1.0)
 
+    def refine_price(self, cached_rows: float, *, impl: str = "xla",
+                     placement: str = "partitioned") -> float:
+        """Seconds to serve a selection by REFINING a cached superset
+        bitmap instead of rescanning the base column: stream the cached
+        index vector, gather the predicate column at those positions,
+        and write the surviving subset — three bitmap-proportional
+        streams.  Compare with ``stream_cost`` of the base column under
+        the same (impl, placement): subsumption wins exactly when the
+        cached bitmap is narrow enough (< 1/3 of the base rows with
+        equal efficiencies), which is the paper's bandwidth arbitrage —
+        bytes moved decide, not operator count."""
+        n_bytes = 3.0 * max(float(cached_rows), 0.0) * BYTES_PER_VALUE
+        return self.stream_cost(n_bytes, impl=impl, placement=placement)
+
+    def refine_wins(self, cached_rows: float, base_rows: float, *,
+                    impl: str = "xla",
+                    placement: str = "partitioned") -> bool:
+        """Whether refining a ``cached_rows``-entry superset bitmap beats
+        recomputing the selection from the ``base_rows``-row column.
+        Both sides are priced under the same (impl, placement), so
+        efficiency and call overhead cancel and the decision reduces to
+        bytes streamed (3*cached < base) — the SAME verdict under any
+        impl, which is what lets the fused-path router and the eager
+        path's gate price with different impls yet never disagree."""
+        return self.refine_price(cached_rows, impl=impl,
+                                 placement=placement) \
+            < self.stream_cost(max(float(base_rows), 1.0)
+                               * BYTES_PER_VALUE,
+                               impl=impl, placement=placement)
+
     def build_price(self, n_rows: float, n_value_cols: int = 0) -> float:
         """Recompute cost of a sorted-bucket join build: the O(n log n)
         key sort plus prefix sums over each carried value column, plus

@@ -39,7 +39,7 @@ from repro.core.channels import ChannelPlan, plan as make_plan
 from repro.launch.mesh import make_host_mesh
 from repro.query import logical as L
 from repro.query import pipeline as pl
-from repro.query.cache import SemanticCache
+from repro.query.cache import SemanticCache, cache_disabled
 from repro.query.cost import (
     ColumnStats, CostModel, PhysNode, TableStats, column_placements,
     key_is_unique, load_calibration, plan_physical,
@@ -135,12 +135,12 @@ class Executor:
         # semantic result/subplan cache: opt-in (``cache_bytes`` budget,
         # or a shared SemanticCache instance) so differential baselines
         # and throughput benchmarks measure real execution by default
+        self.cache: Optional[SemanticCache] = None
         if semantic_cache is not None:
-            self.cache: Optional[SemanticCache] = semantic_cache
+            self.install_cache(semantic_cache)
         elif cache_bytes:
-            self.cache = SemanticCache(cache_bytes, model=self.cost_model)
-        else:
-            self.cache = None
+            self.install_cache(SemanticCache(cache_bytes,
+                                             model=self.cost_model))
         if overlap_transfers is None:
             overlap_transfers = os.environ.get(
                 "REPRO_OVERLAP", "1").lower() not in ("0", "off", "no")
@@ -151,6 +151,10 @@ class Executor:
         self._compiled: Dict[tuple, object] = {}
         self._planned: Dict[L.Node, tuple] = {}
         self._fps: Dict[L.Node, str] = {}
+        # plan -> extracted SelectionInterval (or None): version-free,
+        # so never invalidated — the fused-path router consults it per
+        # execution
+        self._sints: Dict[L.Node, Optional[L.SelectionInterval]] = {}
         self._placed: Dict[Tuple[str, str, str], jax.Array] = {}
         self._builds: Dict[tuple, tuple] = {}
         self._morsels: Dict[tuple, jax.Array] = {}
@@ -161,7 +165,24 @@ class Executor:
         self.result_hits = 0          # semantic cache: whole results
         self.subplan_hits = 0         # semantic cache: eager intermediates
         self.build_hits = 0           # semantic cache: join builds
+        self.subsumption_hits = 0     # selections served by refinement
+        self.refine_bytes_streamed = 0   # bitmap bytes the refine path read
+        self.refine_bytes_avoided = 0    # base-column bytes it did NOT
         self.trace_count = 0          # bumped inside traced bodies only
+
+    def install_cache(self, cache: Optional[SemanticCache]) -> None:
+        """Attach a semantic cache — possibly one SHARED with other
+        executors over the same catalog.  This is the ONE surface that
+        owns the REPRO_CACHE=0 kill-switch (CI's cache-off leg): under
+        it, installation is a no-op everywhere, so no caller can
+        re-enable caching around the gate."""
+        if cache is None or cache_disabled():
+            return
+        self.cache = cache
+        # register the current versions as the cache's drift baseline:
+        # a later mutation then sweeps shared entries even if THIS
+        # executor is the first tenant to notice it
+        cache.sync_versions(self.catalog.versions())
 
     # -- versioned invalidation ---------------------------------------------- #
 
@@ -172,9 +193,11 @@ class Executor:
         semantic cache's dependent entries.  Fingerprints embed versions,
         so even an unswept entry could never be *served* — the sweep only
         reclaims bytes and device memory."""
+        drifted = False
         for name, t in self.catalog.tables.items():
             if self._seen_versions.get(name) == t.version:
                 continue
+            drifted = True
             if name in self._seen_versions:
                 self.catalog.register(t)           # refresh statistics
                 self._placed = {k: v for k, v in self._placed.items()
@@ -186,9 +209,16 @@ class Executor:
                                 if k[0].table != name}
                 self._planned.clear()              # stats feed every plan
                 self._fps.clear()
-                if self.cache is not None:
-                    self.cache.invalidate_table(name)
             self._seen_versions[name] = t.version
+        # the cache tracks versions itself (it may be SHARED by several
+        # executors over this catalog): whichever tenant notices a
+        # mutation first sweeps the dependent entries — and the
+        # subsumption interval buckets — for everyone.  Gated on local
+        # drift so the hot path never takes the shared lock (every
+        # tenant's own detector fires off the same catalog counters;
+        # install_cache registered the baseline)
+        if drifted and self.cache is not None:
+            self.cache.sync_versions(self.catalog.versions())
 
     def fingerprint_of(self, node: L.Node) -> str:
         """Semantic fingerprint of the OPTIMIZED form of ``node`` against
@@ -312,6 +342,11 @@ class Executor:
         splan = pl.analyze(node, self.catalog.stats)
         if splan is None:
             return self._run_eager(node, phys), False
+        if self._route_to_refine(node, splan):
+            # a cached (superset) bitmap makes the eager gather path
+            # cheaper than the fused full-column scan: the selection is
+            # served by refinement instead of re-streaming the base column
+            return self._run_eager(node, phys), False
         key = self._cache_key(node, phys)
         if key in self._compiled:
             self.cache_hits += 1
@@ -328,6 +363,33 @@ class Executor:
         carry = cp.step(lits, cp.init_carry(), jnp.int32(cp.rows),
                         *builds, *arrays)
         return cp.finalize(carry), hit
+
+    def _route_to_refine(self, node: L.Node, splan: pl.StreamPlan) -> bool:
+        """Whether a breaker-free aggregate pipeline should abandon its
+        fused full-column scan for the eager path because the semantic
+        cache holds a selection bitmap (exact or superset) it can refine
+        at lower priced cost.  Routing is purely a performance decision:
+        both paths produce bit-identical answers, and the eager lowering
+        performs the actual (exact-first, then tightest-superset) lookup."""
+        if self.cache is None or splan.breakers:
+            return False
+        if node not in self._sints:
+            self._sints[node] = L.selection_interval(node)
+        si = self._sints[node]
+        if si is None or si.table not in self.catalog.tables:
+            return False
+        version = self.catalog.tables[si.table].version
+        n_rows = self.catalog.stats[si.table].num_rows
+        gate = self._refine_gate(n_rows, "xla")
+        exact = self.cache.peek(("bitmap", si.table, version, si.column,
+                                 si.lo, si.hi))
+        if exact is not None:
+            # serving from the exact bitmap streams only the selected
+            # positions; use the same pricing comparison as refinement
+            return gate(exact)
+        return self.cache.peek_superset(si.table, si.column, version,
+                                        si.lo, si.hi, accept=gate) \
+            is not None
 
     def _cache_key(self, node: L.Node, phys: PhysNode) -> tuple:
         shapes = tuple(sorted(
@@ -664,12 +726,12 @@ class Executor:
         # the table version so a mutated column can never replay.
         # ``cache_ok=False`` is the naive differential-oracle path, which
         # must neither read nor feed the semantic cache
-        bkey = None
+        bkey = interval = None
         if cache_ok and self.cache is not None \
                 and t.name in self.catalog.tables:
-            bkey = ("bitmap", t.name,
-                    self.catalog.tables[t.name].version, column,
-                    int(lo), int(hi))
+            version = self.catalog.tables[t.name].version
+            interval = (t.name, column, version, int(lo), int(hi))
+            bkey = ("bitmap", t.name, version, column, int(lo), int(hi))
             entry = self.cache.get(bkey)
             if entry is not None:
                 self.subplan_hits += 1
@@ -677,6 +739,29 @@ class Executor:
                 return engine.gather(t, idx,
                                      [c for c in keep if c in t.columns],
                                      name=f"{t.name}.sel")
+            # exact miss: predicate SUBSUMPTION — refine the tightest
+            # cached superset bitmap instead of rescanning the base
+            # column.  The pricing gate rides inside the lookup as its
+            # accept predicate, so a superset too wide to be worth
+            # refining (bitmap stream dearer than the column scan) is
+            # never counted as a hit or touched for recency — only a
+            # bitmap refinement actually uses registers anywhere
+            sup = self.cache.lookup_superset(
+                t.name, column, version, int(lo), int(hi),
+                accept=self._refine_gate(t.num_rows, impl))
+            if sup is not None:
+                cached_idx = sup[0].value
+                idx = self._refine_bitmap(t.column(column), cached_idx,
+                                          lo, hi,
+                                          chunk_rows=self._refine_chunk())
+                self.subsumption_hits += 1
+                self.refine_bytes_streamed += 3 * cached_idx.nbytes
+                self.refine_bytes_avoided += t.num_rows * 4
+                # the refined (narrower) bitmap joins the ladder
+                self._admit_bitmap(bkey, idx, interval, t, impl)
+                return engine.gather(
+                    t, idx, [c for c in keep if c in t.columns],
+                    name=f"{t.name}.sel")
         n_eng = self.mesh.shape[self.axis]
         if t.plan is not None and t.num_rows % (n_eng * block) == 0:
             sel = engine.select_range(t, column, lo, hi, impl=impl,
@@ -689,13 +774,66 @@ class Executor:
             mask = (col >= lo) & (col <= hi)
             idx = engine.compact_positions(mask, int(jnp.sum(mask)))
         if bkey is not None:
-            self.cache.put(
-                bkey, idx, kind="bitmap", n_bytes=idx.nbytes,
-                recompute_s=self.cost_model.stream_cost(
-                    t.num_rows * 4, impl=impl, placement="partitioned"),
-                tables=(t.name,))
+            self._admit_bitmap(bkey, idx, interval, t, impl)
         return engine.gather(t, idx, [c for c in keep if c in t.columns],
                              name=f"{t.name}.sel")
+
+    def _refine_gate(self, base_rows: int, impl: str):
+        """The accept predicate for superset lookups: a candidate bitmap
+        qualifies only when refining it is priced below re-streaming the
+        base column."""
+        return lambda e: self.cost_model.refine_wins(
+            int(e.value.shape[0]), base_rows, impl=impl)
+
+    def _admit_bitmap(self, bkey, idx, interval, t: Table,
+                      impl: str) -> None:
+        """One admission surface for scanned AND refined bitmaps: both
+        are priced at the full base-column recompute, so eviction fights
+        treat them identically (a refined entry is no cheaper to lose —
+        its superset parent may be gone by rebuild time)."""
+        self.cache.put(
+            bkey, idx, kind="bitmap", n_bytes=idx.nbytes,
+            recompute_s=self.cost_model.stream_cost(
+                t.num_rows * 4, impl=impl, placement="partitioned"),
+            tables=(t.name,), interval=interval)
+
+    def _refine_chunk(self) -> Optional[int]:
+        """Refinement granularity: None (eager, one gather) in the
+        in-memory posture; with a placement capacity set, the bitmap is
+        refined morsel-style in bounded slices (index + gathered values
+        = 8 bytes per cached row must fit the capacity)."""
+        cap = self.placement_capacity_bytes
+        if cap is None:
+            return None
+        return max(int(cap // 8), 1)
+
+    def _refine_bitmap(self, col: jax.Array, cached_idx: jax.Array,
+                       lo: int, hi: int, *,
+                       chunk_rows: Optional[int] = None) -> jax.Array:
+        """AND a cached superset bitmap with the residual range mask:
+        gather the predicate column at the cached positions and keep the
+        survivors.  ``cached_idx`` is ascending, and compaction preserves
+        order, so the refined bitmap is bit-identical to a from-scratch
+        selection — including row order, which the gather downstream
+        inherits.  ``chunk_rows`` is the streamed/morsel variant: one
+        bounded slice of the cached index at a time (the out-of-core
+        posture where even the bitmap must not be resident at once);
+        per-chunk compaction concatenates to exactly the eager answer
+        because chunks partition the ascending index."""
+        n = int(cached_idx.shape[0])
+        if chunk_rows is None or chunk_rows >= n:
+            vals = jnp.take(col, cached_idx, axis=0)
+            mask = (vals >= lo) & (vals <= hi)
+            keep = engine.compact_positions(mask, int(jnp.sum(mask)))
+            return jnp.take(cached_idx, keep, axis=0)
+        parts = []
+        for s in range(0, n, chunk_rows):
+            sub = cached_idx[s:s + chunk_rows]
+            vals = jnp.take(col, sub, axis=0)
+            mask = (vals >= lo) & (vals <= hi)
+            keep = engine.compact_positions(mask, int(jnp.sum(mask)))
+            parts.append(jnp.take(sub, keep, axis=0))
+        return jnp.concatenate(parts)
 
     def stats_dict(self) -> dict:
         total = self.cache_hits + self.cache_misses
@@ -711,6 +849,9 @@ class Executor:
             "result_cache_hits": self.result_hits,
             "subplan_cache_hits": self.subplan_hits,
             "build_cache_hits": self.build_hits,
+            "subsumption_hits": self.subsumption_hits,
+            "refine_bytes_streamed": self.refine_bytes_streamed,
+            "refine_bytes_avoided": self.refine_bytes_avoided,
         }
         if self.cache is not None:
             out.update(self.cache.stats_dict())

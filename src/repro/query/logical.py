@@ -305,6 +305,93 @@ def fingerprint(node: Node,
     return hashlib.sha256(repr((key, deps)).encode()).hexdigest()[:20]
 
 
+# --------------------------------------------------------------------------- #
+# predicate subsumption (interval extraction + the family key)
+#
+# A range selection's cost is the bytes it streams (the paper's central
+# bandwidth-arbitrage point), so a narrower predicate can be served by
+# refining an already-materialized SUPERSET bitmap — a 1-bit-per-
+# surviving-row stream instead of the 32-bit base column.  The helpers
+# below split a plan into the refinable interval and everything else:
+# ``selection_interval`` extracts the innermost base-table range
+# predicate, and ``subsumption_key`` is the version-keyed family key all
+# range variants of one plan share (unlike ``fingerprint``, which embeds
+# the bounds and therefore only ever matches exactly).
+
+@dataclasses.dataclass(frozen=True)
+class SelectionInterval:
+    """One base-table range predicate lifted out of a plan.
+
+    ``lo``/``hi`` are CLOSED bounds (``lo <= col <= hi``, matching
+    ``Filter``); ``lo > hi`` denotes the empty interval.  ``residual``
+    is the plan with this predicate removed — what still has to run on
+    top of a cached superset bitmap after refinement."""
+    table: str
+    column: str
+    lo: int
+    hi: int
+    residual: Node
+
+    def contains(self, lo: int, hi: int) -> bool:
+        """Closed-interval superset test: every row satisfying
+        ``[lo, hi]`` also satisfies this interval.  An empty request
+        (``lo > hi``) is contained in anything."""
+        return lo > hi or (self.lo <= lo and self.hi >= hi)
+
+
+def selection_interval(node: Node) -> Optional[SelectionInterval]:
+    """Extract the innermost range predicate sitting directly on a base
+    Scan (probe side first for joins), plus the residual plan with that
+    predicate removed.  Returns None when no Filter/FilterProject wraps
+    a Scan — there is nothing a cached superset bitmap could serve."""
+    found: list = []
+
+    def rebuild(n: Node) -> Node:
+        if not found and isinstance(n, Filter) \
+                and isinstance(n.child, Scan):
+            found.append((n.child.table, n.column, int(n.lo), int(n.hi)))
+            return n.child
+        if not found and isinstance(n, FilterProject) \
+                and isinstance(n.child, Scan):
+            found.append((n.child.table, n.column, int(n.lo), int(n.hi)))
+            return Project(n.child, n.columns)
+        updates = {}
+        for f in dataclasses.fields(n):
+            v = getattr(n, f.name)
+            if isinstance(v, Node) and not found:
+                updates[f.name] = rebuild(v)
+        return dataclasses.replace(n, **updates) if updates else n
+
+    residual = rebuild(node)
+    if not found:
+        return None
+    table, column, lo, hi = found[0]
+    return SelectionInterval(table, column, lo, hi, residual)
+
+
+def subsumption_key(node: Node,
+                    versions: Optional[Mapping[str, int]] = None
+                    ) -> Optional[tuple]:
+    """Version-keyed FAMILY key for predicate subsumption, distinct from
+    the exact fingerprint: every range variant of one selection plan —
+    same structure, same predicate table/column, any ``(lo, hi)`` —
+    shares this key.  The ``(table, column, version)`` triple this key
+    leads with IS the semantic cache's interval-index bucket key
+    (``SemanticCache.lookup_superset``) — the cache deliberately buckets
+    by the triple alone so bitmaps are shared across plans with
+    different residuals (a selection bitmap does not depend on what
+    runs above it); the residual fingerprint here distinguishes whole
+    PLAN families for callers that need plan-level identity (tests,
+    observability).  Returns None when the plan has no extractable
+    interval."""
+    si = selection_interval(canonicalize(node))
+    if si is None:
+        return None
+    version = int(versions.get(si.table, 0)) if versions else 0
+    return ("subsume", si.table, si.column, version,
+            fingerprint(si.residual, versions, order_sensitive=True))
+
+
 def pformat(node: Node, indent: int = 0, note=None) -> str:
     """Readable plan tree (EXPLAIN-style)."""
     pad = "  " * indent

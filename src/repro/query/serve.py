@@ -300,8 +300,20 @@ class QueryServer:
     (``streaming=True``)."""
 
     def __init__(self, executor: Executor, *, streaming: bool = False,
-                 morsel_rows: Optional[int] = None):
+                 morsel_rows: Optional[int] = None,
+                 semantic_cache=None):
         self.executor = executor
+        # an EXTERNAL SemanticCache shared across several executors (and
+        # their servers) over one catalog: installed on this server's
+        # executor, so every tenant's warm results/bitmaps/builds serve
+        # everyone else's admissions.  The cache's own version tracking
+        # (``SemanticCache.sync_versions``, driven by each executor's
+        # version sync) is the drift guard — one tenant's
+        # ``Catalog.update_column`` invalidates the shared entries for
+        # all of them, whoever notices first.  ``install_cache`` owns
+        # the REPRO_CACHE kill-switch, so the CI cache-off leg cannot be
+        # re-enabled from here
+        executor.install_cache(semantic_cache)
         self.streaming = streaming
         self.morsel_rows = morsel_rows
         self._lock = threading.Lock()

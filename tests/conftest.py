@@ -1,6 +1,33 @@
 import numpy as np
 import pytest
 
+# REPRO_CACHE=0 force-disables the semantic cache inside Executor (the
+# CI leg pinning the cache-off execution paths).  Tests that assert
+# cache behavior are meaningless there — mark them ``requires_cache``
+# and they are skipped in that leg instead of failing.  The parse lives
+# in ONE place (repro.query.cache.cache_disabled) so the skips and the
+# runtime gate can never disagree.
+from repro.query.cache import cache_disabled
+
+CACHE_DISABLED = cache_disabled()
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "requires_cache: asserts semantic-cache behavior; skipped when "
+        "REPRO_CACHE=0 disables the cache")
+
+
+def pytest_collection_modifyitems(config, items):
+    if not CACHE_DISABLED:
+        return
+    skip = pytest.mark.skip(
+        reason="REPRO_CACHE=0: the semantic cache is force-disabled")
+    for item in items:
+        if item.get_closest_marker("requires_cache"):
+            item.add_marker(skip)
+
 
 @pytest.fixture(scope="session")
 def host_mesh():

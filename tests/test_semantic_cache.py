@@ -114,6 +114,7 @@ def test_fingerprint_embeds_table_versions():
 # --------------------------------------------------------------------------- #
 # result reuse + invalidation
 
+@pytest.mark.requires_cache
 def test_result_cache_hit_skips_execution(rng):
     cat, *_ = _make_catalog(rng)
     ex = Executor(cat, cache_bytes=32 << 20)
@@ -128,6 +129,7 @@ def test_result_cache_hit_skips_execution(rng):
     assert ex.result_hits == 2
 
 
+@pytest.mark.requires_cache
 def test_mutation_invalidates_differential(rng):
     """Acceptance: a base-table mutation provably invalidates dependent
     entries — post-mutation results are bit-identical to cache-disabled
@@ -222,6 +224,7 @@ def test_invalidate_table_sweeps_dependents():
     assert "c" in cache and cache.used_bytes == 10
 
 
+@pytest.mark.requires_cache
 def test_executor_under_tight_budget_stays_correct(rng):
     """A budget too small for every working-set entry must degrade to
     recomputation, never to wrong answers."""
@@ -256,6 +259,7 @@ def test_common_subplans_extraction(rng):
         Q.scan("big").filter("w", 1, 5).count("k").node])
 
 
+@pytest.mark.requires_cache
 def test_eager_subplan_reuse_across_different_roots(rng):
     """Two Project-rooted queries over the same filtered join reuse the
     materialized intermediate (subplan hit on the second run)."""
@@ -274,6 +278,7 @@ def test_eager_subplan_reuse_across_different_roots(rng):
                                   np.asarray(t2.column("w")))
 
 
+@pytest.mark.requires_cache
 def test_server_serves_cached_and_hints_shared(rng):
     cat, big, _ = _make_catalog(rng)
     srv = QueryServer(Executor(cat, cache_bytes=32 << 20))
@@ -291,6 +296,7 @@ def test_server_serves_cached_and_hints_shared(rng):
     assert srv.n_subplan_shared > 0
 
 
+@pytest.mark.requires_cache
 def test_streamed_completion_feeds_result_cache(rng):
     """A query that completed by STREAMING admits its result, so the
     next submission finishes at admission instead of re-streaming."""
@@ -352,6 +358,7 @@ def test_build_side_mutation_on_streaming_server(rng):
         assert int(srv.query(q)) == want, cache_bytes
 
 
+@pytest.mark.requires_cache
 def test_streaming_server_dedups_by_fingerprint(rng):
     """Semantically-equal spellings dedup against an in-flight member
     even when the trees differ structurally."""

@@ -1,0 +1,203 @@
+"""Cross-executor shared SemanticCache: hits, invalidation, thread safety.
+
+Several executors over ONE catalog share ONE budgeted cache — the
+multi-tenant posture (Wang et al.: effective HBM bandwidth collapses
+under uncoordinated concurrent access, so tenants should share one
+materialization pool instead of each re-streaming the base columns).
+Pinned contracts: a result one tenant warms serves every tenant; one
+tenant's ``Catalog.update_column`` makes every tenant's dependent
+entries unreachable AND swept (the version-drift guard), with
+post-mutation reads bit-identical to cache-disabled execution; and the
+cache's byte/interval accounting survives concurrent eviction pressure
+while a streaming server pumps (no torn reads).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.columnar.table import Table
+from repro.query import (
+    Catalog, CostModel, Executor, Q, QueryServer, SemanticCache,
+)
+
+pytestmark = pytest.mark.requires_cache
+
+
+def _make_catalog(seed=0, n=4096, n_small=512):
+    r = np.random.default_rng(seed)
+    big = Table.from_arrays("big", {
+        "k": r.integers(0, 1000, size=n).astype(np.int32),
+        "v": r.integers(0, 1000, size=n).astype(np.int32),
+        "w": r.integers(1, 50, size=n).astype(np.int32)})
+    small = Table.from_arrays("small", {
+        "k": np.asarray(r.choice(1000, size=n_small, replace=False),
+                        np.int32),
+        "x": r.integers(0, 9, size=n_small).astype(np.int32)})
+    return Catalog.from_tables(big, small)
+
+
+def _join_sum(lo=30, hi=49):
+    return (Q.scan("big").join(Q.scan("small"), on="k")
+             .filter("v", lo, hi).sum("w"))
+
+
+def _cache_consistent(cache: SemanticCache) -> None:
+    """Byte and interval-index accounting invariants — what a torn
+    read/write under concurrency would corrupt."""
+    with cache._lock:
+        assert cache.used_bytes == sum(e.n_bytes
+                                       for e in cache._entries.values())
+        assert cache.used_bytes <= cache.budget_bytes
+        for bucket in cache._intervals.values():
+            for key in bucket:
+                assert key in cache._entries
+
+
+def test_cross_executor_result_hit():
+    cat = _make_catalog()
+    shared = SemanticCache(32 << 20, model=CostModel(1))
+    a = Executor(cat, semantic_cache=shared)
+    b = Executor(cat, semantic_cache=shared)
+    q = _join_sum()
+    warm = a.execute(q)
+    assert not warm.result_cache_hit
+    hit = b.execute(q)
+    assert hit.result_cache_hit and hit.value == warm.value
+    assert b.result_hits == 1 and shared.hits >= 1
+
+
+def test_cross_executor_subsumption_refinement():
+    """Tenant A's wide selection bitmap serves tenant B's narrower
+    query by refinement — B never streams the base column."""
+    cat = _make_catalog()
+    shared = SemanticCache(32 << 20, model=CostModel(1))
+    a = Executor(cat, semantic_cache=shared)
+    b = Executor(cat, semantic_cache=shared)
+    wide = Q.scan("big").filter("v", 0, 300).project("k", "w")
+    narrow = Q.scan("big").filter("v", 100, 250).project("k", "w")
+    a.execute(wide)
+    got = b.execute(narrow).value
+    assert b.subsumption_hits == 1 and a.subsumption_hits == 0
+    ref = Executor(cat).execute(narrow, optimized=False).value
+    for c in ("k", "w"):
+        np.testing.assert_array_equal(np.asarray(got.column(c)),
+                                      np.asarray(ref.column(c)))
+
+
+def test_mutation_by_one_executor_invalidates_everyone():
+    """B mutates through the shared catalog: A's next read must not
+    serve stale bytes — differential against cache-disabled execution —
+    and the shared sweep reclaims the dependent entries once."""
+    cat = _make_catalog()
+    shared = SemanticCache(32 << 20, model=CostModel(1))
+    a = Executor(cat, semantic_cache=shared)
+    b = Executor(cat, semantic_cache=shared)
+    q = _join_sum()
+    wide = Q.scan("big").filter("v", 0, 300).project("k", "w")
+    stale_val = a.execute(q).value
+    a.execute(wide)                               # a bitmap too
+    assert b.execute(q).result_cache_hit
+    r = np.random.default_rng(99)
+    cat.update_column("big", "w",
+                      r.integers(51, 99, size=4096).astype(np.int32))
+    res_a = a.execute(q)
+    assert not res_a.result_cache_hit
+    plain = Executor(cat).execute(q).value        # cache-disabled
+    assert int(res_a.value) == int(plain)
+    assert int(res_a.value) != int(stale_val)
+    assert int(b.execute(q).value) == int(plain)
+    assert shared.invalidated > 0
+    # the old-version interval bucket was swept with the entries
+    assert shared.lookup_superset("big", "v", 0, 100, 250) is None
+    _cache_consistent(shared)
+
+
+def test_server_accepts_external_shared_cache():
+    """``QueryServer(..., semantic_cache=...)`` installs the shared
+    cache: a result served through one tenant's server completes at
+    admission on another tenant's server."""
+    cat = _make_catalog()
+    shared = SemanticCache(32 << 20, model=CostModel(1))
+    srv_a = QueryServer(Executor(cat), semantic_cache=shared)
+    srv_b = QueryServer(Executor(cat), semantic_cache=shared)
+    assert srv_a.executor.cache is shared
+    assert srv_b.executor.cache is shared
+    q = _join_sum(10, 60)
+    first = srv_a.query(q)
+    second = srv_b.query(q)
+    assert first == second
+    assert srv_b.n_cached == 1
+    assert any(rec.path == "cached" for rec in srv_b.history)
+
+
+def test_streaming_server_cross_tenant_build_reuse():
+    """A join build admitted by tenant A's streamed plan is the SAME
+    flattened state tenant B's pipeline consumes — B skips its whole
+    build phase."""
+    cat = _make_catalog()
+    shared = SemanticCache(32 << 20, model=CostModel(1))
+    a = Executor(cat, semantic_cache=shared)
+    b = Executor(cat, semantic_cache=shared)
+    q = _join_sum(5, 80)
+    va = a.execute(q, mode="stream").value
+    assert b.build_hits == 0
+    vb = b.execute(Q.scan("big").join(Q.scan("small"), on="k")
+                    .filter("v", 5, 80).count("w"), mode="stream").value
+    assert b.build_hits == 1                      # build phase skipped
+    plain = Executor(cat)
+    assert va == plain.execute(q).value
+    assert vb == plain.execute(
+        Q.scan("big").join(Q.scan("small"), on="k")
+         .filter("v", 5, 80).count("w")).value
+
+
+def test_threaded_pump_no_torn_reads_at_eviction():
+    """A streaming server pumps while another thread churns the shared
+    cache with high-score admissions (forcing evictions of the builds
+    and bitmaps mid-flight).  Every result must equal the oracle and
+    the cache's byte/interval accounting must end consistent — the
+    torn-read contract of the shared lock."""
+    cat = _make_catalog()
+    shared = SemanticCache(1 << 20, model=CostModel(1))   # tight: churns
+    ex = Executor(cat, semantic_cache=shared)
+    srv = QueryServer(ex, streaming=True, morsel_rows=512)
+    queries = [_join_sum(lo, lo + 37) for lo in range(0, 160, 10)]
+    plain = Executor(cat)
+    want = {i: plain.execute(q).value for i, q in enumerate(queries)}
+
+    stop = threading.Event()
+    errors = []
+
+    def churn():
+        i = 0
+        try:
+            while not stop.is_set():
+                shared.put(("noise", i % 7),
+                           np.zeros(4096, np.int32), kind="result",
+                           n_bytes=16384, recompute_s=100.0,
+                           tables=())
+                shared.lookup_superset("big", "v", 0, 10, 20)
+                shared.peek_superset("big", "v", 0, 10, 20)
+                i += 1
+        except Exception as e:                     # noqa: BLE001
+            errors.append(e)
+
+    t = threading.Thread(target=churn, daemon=True)
+    t.start()
+    try:
+        qids = {}
+        results = {}
+        for i, q in enumerate(queries):
+            qids[srv.submit(q)] = i
+            results.update(srv.pump())
+        while srv._inflight():
+            results.update(srv.pump())
+    finally:
+        stop.set()
+        t.join(timeout=10)
+    assert not errors, errors
+    assert not t.is_alive()
+    for qid, i in qids.items():
+        assert int(results[qid]) == int(want[i]), i
+    _cache_consistent(shared)
