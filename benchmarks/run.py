@@ -16,6 +16,8 @@ def main() -> None:
     from benchmarks.paper_figures import ALL
     from benchmarks.bench_cache import cache_figures, subsumption_smoke
     from benchmarks.bench_join_duplicates import join_duplicates
+    from benchmarks.bench_observability import (
+        observability_figures, observability_smoke)
     from benchmarks.calibrate import calibrate
     smoke = "--smoke" in sys.argv
 
@@ -29,12 +31,15 @@ def main() -> None:
     # join_duplicates / cache_figures run full-scale only: smoke mode
     # keeps the two fast figures, and the bench_*.py --smoke entry points
     # cover the smoke case
-    fns = ALL + [join_duplicates, cache_figures]
+    fns = ALL + [join_duplicates, cache_figures, observability_figures]
     if smoke:
         # subsumption_smoke exercises the refine path + shared cache at
-        # smoke scale without clobbering the committed BENCH_cache.json
+        # smoke scale without clobbering the committed BENCH_cache.json;
+        # observability_smoke writes BENCH_observability.json + the
+        # Chrome trace artifact on every smoke run
         fns = [fn for fn in ALL if fn.__name__ in
-               ("fig2_bandwidth", "tab3_roofline")] + [subsumption_smoke]
+               ("fig2_bandwidth", "tab3_roofline")] + \
+              [subsumption_smoke, observability_smoke]
     if only:
         fns = [fn for fn in fns if only in fn.__name__]
 

@@ -33,3 +33,7 @@ from repro.query.exec import (                                   # noqa: F401
     Catalog, Executor, PlacementCapacityError, Result, sql_like_query,
 )
 from repro.query.serve import QueryRecord, QueryServer           # noqa: F401
+from repro.query.telemetry import (                              # noqa: F401
+    BandwidthLedger, LedgerRow, MetricsRegistry, Telemetry, Tracer,
+    set_global, trace_enabled,
+)

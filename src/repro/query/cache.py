@@ -46,6 +46,8 @@ import os
 import threading
 from typing import Dict, Hashable, Iterable, Mapping, Optional, Tuple
 
+from repro.query import telemetry as tm
+
 DEFAULT_BUDGET_BYTES = 64 << 20          # 64 MiB of materialized state
 
 
@@ -85,11 +87,15 @@ class SemanticCache:
     """
 
     def __init__(self, budget_bytes: int = DEFAULT_BUDGET_BYTES, *,
-                 model=None):
+                 model=None, telemetry: Optional["tm.Telemetry"] = None):
         if model is None:
             from repro.query.cost import CostModel
             model = CostModel(1)
         self.model = model
+        # admission/rejection/eviction decisions emit instant trace
+        # events (with the priced scores that decided them) — default
+        # the shared REPRO_TRACE-gated global, no-ops when disabled
+        self.tel = telemetry if telemetry is not None else tm.get()
         self.budget_bytes = int(budget_bytes)
         self._entries: Dict[Hashable, CacheEntry] = {}
         # (table, column, version) -> {entry key: (lo, hi)} — the
@@ -233,6 +239,9 @@ class SemanticCache:
         n_bytes = max(int(n_bytes), 0)
         if n_bytes > self.budget_bytes:
             self.rejected += 1
+            if self.tel.enabled:
+                self.tel.instant("cache.reject", kind=kind,
+                                 reason="over_budget", n_bytes=n_bytes)
             return False
         hinted = key in self._hinted
         if hinted:
@@ -260,15 +269,26 @@ class SemanticCache:
                     break
             if need > 0:
                 self.rejected += 1
+                if self.tel.enabled:
+                    self.tel.instant(
+                        "cache.reject", kind=kind, reason="outpriced",
+                        n_bytes=n_bytes, score=score)
                 return False
         for e in victims:
             self._drop(e)
             self.evicted += 1
+            if self.tel.enabled:
+                self.tel.instant(
+                    "cache.evict", kind=e.kind, n_bytes=e.n_bytes,
+                    score=e.score(self.model), displaced_by=kind)
         self._tick += 1
         cand.tick = self._tick
         self._entries[key] = cand
         self.used_bytes += n_bytes
         self.admitted += 1
+        if self.tel.enabled:
+            self.tel.instant("cache.admit", kind=kind, n_bytes=n_bytes,
+                             score=score)
         if interval is not None:
             table, column, version, lo, hi = interval
             self._intervals.setdefault(

@@ -380,6 +380,7 @@ class PhysNode:
     alternatives: Dict[str, float]
     children: Tuple["PhysNode", ...] = ()
     morsel_rows: Optional[int] = None     # streaming pipeline granularity
+    n_bytes: float = 0.0                  # predicted bytes moved (priced)
 
     @property
     def total_cost_s(self) -> float:
@@ -431,11 +432,11 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
                 n_bytes, impl="xla", placement="replicated")
             return PhysNode("scan", node, "xla", "replicated", 1, rows,
                             cost, model.bandwidth_gbps("replicated"),
-                            {"xla/replicated": cost})
+                            {"xla/replicated": cost}, n_bytes=n_bytes)
         impl, pl, cost, alts = _choose(model, n_bytes,
                                        ("partitioned", "congested"))
         return PhysNode("scan", node, impl, pl, 1, rows, cost,
-                        model.bandwidth_gbps(pl), alts)
+                        model.bandwidth_gbps(pl), alts, n_bytes=n_bytes)
 
     if isinstance(node, (L.Filter, L.FilterProject)):
         child = plan_physical(node.child, stats, model, role=role)
@@ -450,7 +451,8 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
         op = "filter_project" if isinstance(node, L.FilterProject) \
             else "filter"
         return PhysNode(op, node, impl, pl, 1, rows, cost,
-                        model.bandwidth_gbps(pl), alts, (child,))
+                        model.bandwidth_gbps(pl), alts, (child,),
+                        n_bytes=n_bytes)
 
     if isinstance(node, L.Join):
         left = plan_physical(node.left, stats, model, role="stream")
@@ -491,14 +493,16 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
         impl, pl, cost, alts = _choose(model, n_bytes, (probe_pl,),
                                        n_passes=n_passes)
         return PhysNode(op, node, impl, pl, n_passes, rows, cost,
-                        model.bandwidth_gbps(pl), alts, (left, right))
+                        model.bandwidth_gbps(pl), alts, (left, right),
+                        n_bytes=n_bytes)
 
     if isinstance(node, L.Project):
         child = plan_physical(node.child, stats, model, role=role)
         n_bytes = rows * BYTES_PER_VALUE * len(node.columns)
         impl, pl, cost, alts = _choose(model, n_bytes, ("partitioned",))
         return PhysNode("project", node, impl, pl, 1, rows, cost,
-                        model.bandwidth_gbps(pl), alts, (child,))
+                        model.bandwidth_gbps(pl), alts, (child,),
+                        n_bytes=n_bytes)
 
     if isinstance(node, L.Aggregate):
         child = plan_physical(node.child, stats, model, role=role)
@@ -516,7 +520,7 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
                 stats[base.table].num_rows, max(n_cols, 1), impl=impl)
         return PhysNode("aggregate", node, impl, pl, 1, 1.0, cost,
                         model.bandwidth_gbps(pl), alts, (child,),
-                        morsel_rows=morsel_rows)
+                        morsel_rows=morsel_rows, n_bytes=n_bytes)
 
     if isinstance(node, L.TrainGLM):
         child = plan_physical(node.child, stats, model, role="build")
@@ -539,7 +543,8 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
         best = min(alts, key=alts.get)
         impl, pl = best.split("/")
         return PhysNode("train_glm", node, impl, pl, 1, float(k),
-                        alts[best], model.bandwidth_gbps(pl), alts, (child,))
+                        alts[best], model.bandwidth_gbps(pl), alts, (child,),
+                        n_bytes=dataset * node.epochs * k)
 
     raise TypeError(node)
 

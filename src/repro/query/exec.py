@@ -25,6 +25,7 @@ here — callers hand the catalog *unplaced* host tables.
 from __future__ import annotations
 
 import dataclasses
+import math
 import os
 import time
 from typing import Dict, Optional, Tuple
@@ -39,10 +40,11 @@ from repro.core.channels import ChannelPlan, plan as make_plan
 from repro.launch.mesh import make_host_mesh
 from repro.query import logical as L
 from repro.query import pipeline as pl
+from repro.query import telemetry as tm
 from repro.query.cache import SemanticCache, cache_disabled
 from repro.query.cost import (
-    ColumnStats, CostModel, PhysNode, TableStats, column_placements,
-    key_is_unique, load_calibration, plan_physical,
+    BYTES_PER_VALUE, ColumnStats, CostModel, PhysNode, TableStats,
+    column_placements, key_is_unique, load_calibration, plan_physical,
 )
 from repro.query.optimize import optimize
 
@@ -114,16 +116,61 @@ def _explain(p: PhysNode, indent: int = 0) -> str:
     return "\n".join(lines)
 
 
+def _counter(name: str, doc: str):
+    """Back-compat surface for the consolidated metrics: the old ad-hoc
+    attributes (``ex.cache_hits`` etc.) keep reading and writing, but the
+    value now lives in the executor's MetricsRegistry under ``name``."""
+
+    def fget(self):
+        return int(self.metrics.value(name))
+
+    def fset(self, value):
+        self.metrics.set(name, value)
+
+    return property(fget, fset, doc=doc)
+
+
 class Executor:
     """optimize -> cost -> lower -> run, with a compiled-plan cache."""
+
+    # consolidated counters (satellite of the telemetry PR): one registry,
+    # old attribute names preserved as properties — external code that
+    # reads or bumps them (serve.py, tests, benchmarks) is unaffected
+    cache_hits = _counter("exec.plan_cache_hits",
+                          "compiled-plan cache hits")
+    cache_misses = _counter("exec.plan_cache_misses",
+                            "compiled-plan cache misses")
+    result_hits = _counter("exec.result_cache_hits",
+                           "semantic cache: whole results")
+    subplan_hits = _counter("exec.subplan_cache_hits",
+                            "semantic cache: eager intermediates")
+    build_hits = _counter("exec.build_cache_hits",
+                          "semantic cache: join builds")
+    subsumption_hits = _counter("exec.subsumption_hits",
+                                "selections served by refinement")
+    refine_bytes_streamed = _counter(
+        "exec.refine_bytes_streamed",
+        "bitmap bytes the refine path read")
+    refine_bytes_avoided = _counter(
+        "exec.refine_bytes_avoided",
+        "base-column bytes refinement did NOT read")
+    trace_count = _counter("exec.trace_count",
+                           "bumped inside traced bodies only")
 
     def __init__(self, catalog: Catalog, mesh=None, axis: str = "model",
                  cost_model: Optional[CostModel] = None,
                  placement_capacity_bytes: Optional[int] = None,
                  cache_bytes: Optional[int] = None,
                  semantic_cache: Optional[SemanticCache] = None,
-                 overlap_transfers: Optional[bool] = None):
+                 overlap_transfers: Optional[bool] = None,
+                 telemetry: Optional[tm.Telemetry] = None):
         self.catalog = catalog
+        # spans + bandwidth ledger are shared (default: the process
+        # global, REPRO_TRACE-gated); the metrics registry is PRIVATE so
+        # multi-tenant counters never mix
+        self.tel = telemetry if telemetry is not None else tm.get()
+        self.metrics = tm.MetricsRegistry()
+        self.reset_metrics()
         self.mesh = mesh if mesh is not None else make_host_mesh()
         self.axis = axis
         n_eng = self.mesh.shape[axis]
@@ -160,15 +207,29 @@ class Executor:
         self._morsels: Dict[tuple, jax.Array] = {}
         self._morsel_cache_rows: Dict[str, int] = {}
         self._seen_versions: Dict[str, int] = catalog.versions()
-        self.cache_hits = 0
-        self.cache_misses = 0
-        self.result_hits = 0          # semantic cache: whole results
-        self.subplan_hits = 0         # semantic cache: eager intermediates
-        self.build_hits = 0           # semantic cache: join builds
-        self.subsumption_hits = 0     # selections served by refinement
-        self.refine_bytes_streamed = 0   # bitmap bytes the refine path read
-        self.refine_bytes_avoided = 0    # base-column bytes it did NOT
-        self.trace_count = 0          # bumped inside traced bodies only
+
+    _COUNTERS = (
+        "exec.plan_cache_hits", "exec.plan_cache_misses",
+        "exec.result_cache_hits", "exec.subplan_cache_hits",
+        "exec.build_cache_hits", "exec.subsumption_hits",
+        "exec.refine_bytes_streamed", "exec.refine_bytes_avoided",
+        "exec.trace_count", "exec.refine_routed")
+
+    def reset_metrics(self) -> None:
+        """Zero every counter and histogram (the registry keeps its
+        identity, so held references stay valid)."""
+        self.metrics.reset()
+        for name in self._COUNTERS:
+            self.metrics.set(name, 0)
+
+    def metrics_snapshot(self) -> dict:
+        """Flat snapshot of the consolidated metrics registry — counters
+        verbatim, histograms as ``name.{count,mean,p50,p95,max}`` — plus
+        the semantic cache's accounting when one is installed."""
+        out = self.metrics.snapshot()
+        if self.cache is not None:
+            out.update(self.cache.stats_dict())
+        return out
 
     def install_cache(self, cache: Optional[SemanticCache]) -> None:
         """Attach a semantic cache — possibly one SHARED with other
@@ -267,39 +328,59 @@ class Executor:
         (fused single-morsel pipeline, or eager engine operators);
         ``mode="stream"`` drives the same pipeline morsel by morsel with
         double-buffered placement transfers, falling back to batch when
-        the plan has no streamable probe spine."""
+        the plan has no streamable probe spine; ``mode="eager"`` forces
+        the step-by-step engine lowering under the SAME physical plan —
+        the observability surface where every operator can be fenced and
+        measured individually (the bandwidth ledger's per-op rows)."""
         node = q.node if isinstance(q, L.Q) else q
         t0 = time.perf_counter()
-        self._sync_versions()          # every path, incl. the naive oracle
-        if not optimized:
+        with self.tel.span("exec.execute", mode=mode,
+                           optimized=optimized) as sp:
+            self._sync_versions()      # every path, incl. the naive oracle
+            if not optimized:
+                if mode == "stream":
+                    raise ValueError(
+                        "mode='stream' lowers through the optimizer's "
+                        "physical plan; it cannot combine with "
+                        "optimized=False")
+                # the naive path is the differential oracle: it never
+                # reads or feeds the semantic cache
+                sp.set(path="naive")
+                return Result(self._run_eager(node, None), None, False,
+                              time.perf_counter() - t0)
+            orig = node
+            node, phys = self.plan(node)
+            if self.cache is not None:
+                fp = self.fingerprint_of(orig)
+                entry = self.cache.get(("result", fp))
+                if entry is not None:
+                    self.metrics.inc("exec.result_cache_hits")
+                    sp.set(path="result_cache",
+                           outcome="hit", reason="fingerprint_match")
+                    return Result(entry.value, phys, True,
+                                  time.perf_counter() - t0, mode=mode,
+                                  result_cache_hit=True)
+                sp.set(outcome="miss")
             if mode == "stream":
-                raise ValueError(
-                    "mode='stream' lowers through the optimizer's physical "
-                    "plan; it cannot combine with optimized=False")
-            # the naive path is the differential oracle: it never reads
-            # or feeds the semantic cache
-            return Result(self._run_eager(node, None), None, False,
-                          time.perf_counter() - t0)
-        orig = node
-        node, phys = self.plan(node)
-        if self.cache is not None:
-            fp = self.fingerprint_of(orig)
-            entry = self.cache.get(("result", fp))
-            if entry is not None:
-                self.result_hits += 1
-                return Result(entry.value, phys, True,
-                              time.perf_counter() - t0, mode=mode,
-                              result_cache_hit=True)
-        if mode == "stream":
-            splan = pl.analyze(node, self.catalog.stats)
-            if splan is not None:
-                value, hit = self._run_stream(node, phys, splan, morsel_rows)
+                splan = pl.analyze(node, self.catalog.stats)
+                if splan is not None:
+                    sp.set(path="stream")
+                    value, hit = self._run_stream(node, phys, splan,
+                                                  morsel_rows)
+                    self._admit_result(orig, node, phys, value)
+                    return Result(value, phys, hit,
+                                  time.perf_counter() - t0, mode="stream")
+                sp.set(reason="no_streamable_spine")
+            if mode == "eager":
+                sp.set(path="eager")
+                value = self._run_eager(node, phys)
                 self._admit_result(orig, node, phys, value)
-                return Result(value, phys, hit, time.perf_counter() - t0,
-                              mode="stream")
-        value, hit = self._run(node, phys)
-        self._admit_result(orig, node, phys, value)
-        return Result(value, phys, hit, time.perf_counter() - t0)
+                return Result(value, phys, False,
+                              time.perf_counter() - t0, mode="eager")
+            sp.set(path="batch")
+            value, hit = self._run(node, phys)
+            self._admit_result(orig, node, phys, value)
+            return Result(value, phys, hit, time.perf_counter() - t0)
 
     def _admit_result(self, orig: L.Node, opt: L.Node, phys: PhysNode,
                       value) -> None:
@@ -322,8 +403,13 @@ class Executor:
         self._sync_versions()
         if node in self._planned:
             return self._planned[node]
-        opt = optimize(node, self.catalog.stats, self.cost_model)
-        phys = plan_physical(opt, self.catalog.stats, self.cost_model)
+        with self.tel.span("exec.plan") as sp:
+            with self.tel.span("exec.optimize"):
+                opt = optimize(node, self.catalog.stats, self.cost_model)
+            with self.tel.span("exec.cost_physical"):
+                phys = plan_physical(opt, self.catalog.stats,
+                                     self.cost_model)
+            sp.set(predicted_s=phys.total_cost_s)
         self._planned[node] = (opt, phys)
         return opt, phys
 
@@ -346,13 +432,16 @@ class Executor:
             # a cached (superset) bitmap makes the eager gather path
             # cheaper than the fused full-column scan: the selection is
             # served by refinement instead of re-streaming the base column
+            self.metrics.inc("exec.refine_routed")
+            self.tel.instant("exec.route_refine",
+                             reason="cached_bitmap_priced_below_scan")
             return self._run_eager(node, phys), False
         key = self._cache_key(node, phys)
         if key in self._compiled:
-            self.cache_hits += 1
+            self.metrics.inc("exec.plan_cache_hits")
             hit = True
         else:
-            self.cache_misses += 1
+            self.metrics.inc("exec.plan_cache_misses")
             self._compiled[key] = self._compile(node, phys, splan,
                                                 rows=None)
             hit = False
@@ -360,9 +449,26 @@ class Executor:
         arrays = [self.placed(t, c, p) for t, c, p in specs]
         builds = self._breaker_arrays(splan.breakers)
         lits = jnp.asarray(L.literals(node), jnp.int32)
-        carry = cp.step(lits, cp.init_carry(), jnp.int32(cp.rows),
-                        *builds, *arrays)
-        return cp.finalize(carry), hit
+        if not self.tel.enabled:
+            carry = cp.step(lits, cp.init_carry(), jnp.int32(cp.rows),
+                            *builds, *arrays)
+            return cp.finalize(carry), hit
+        # fenced measurement: settle async input transfers first, then
+        # time dispatch-to-completion of the fused step — the one
+        # measurement the ledger apportions across the plan's operators
+        with self.tel.span("exec.run_fused", compiled_hit=hit) as sp:
+            jax.block_until_ready(arrays)
+            jax.block_until_ready(builds)
+            t0 = time.perf_counter()
+            carry = cp.step(lits, cp.init_carry(), jnp.int32(cp.rows),
+                            *builds, *arrays)
+            jax.block_until_ready(carry)
+            dt = time.perf_counter() - t0
+            moved = sum(a.nbytes for a in arrays) \
+                + sum(b.nbytes for b in builds)
+            sp.set(measured_s=dt, measured_bytes=moved)
+            self.tel.ledger.record_plan(phys, dt, moved, mode="fused")
+            return cp.finalize(carry), hit
 
     def _route_to_refine(self, node: L.Node, splan: pl.StreamPlan) -> bool:
         """Whether a breaker-free aggregate pipeline should abandon its
@@ -426,7 +532,7 @@ class Executor:
                       for j in splan.join_nodes)
 
         def bump():
-            self.trace_count += 1
+            self.metrics.inc("exec.trace_count")
 
         cp = pl.compile_pipeline(splan, rows, self._agg_dtype(splan),
                                  impls=impls, trace_marker=bump)
@@ -461,7 +567,7 @@ class Executor:
                         b.unique)
                 entry = self.cache.get(ckey)
                 if entry is not None:
-                    self.build_hits += 1
+                    self.metrics.inc("exec.build_cache_hits")
                     flat.extend(entry.value)
                     continue
                 arrays = self._make_build(b)
@@ -512,9 +618,24 @@ class Executor:
         lits = jnp.asarray(L.literals(node), jnp.int32)
         get = lambda i: self._stream_morsel(table, cp.stream_cols,   # noqa: E731
                                             spec, i, cache_ok)
-        carry = pl.drive(cp, spec.n_morsels, get, builds, lits,
-                         prefetch=self.overlap_transfers)
-        return cp.finalize(carry), hit
+        if not self.tel.enabled:
+            carry = pl.drive(cp, spec.n_morsels, get, builds, lits,
+                             prefetch=self.overlap_transfers)
+            return cp.finalize(carry), hit
+        with self.tel.span("exec.run_stream", n_morsels=spec.n_morsels,
+                           morsel_rows=spec.rows, compiled_hit=hit) as sp:
+            jax.block_until_ready(builds)
+            t0 = time.perf_counter()
+            carry = pl.drive(cp, spec.n_morsels, get, builds, lits,
+                             prefetch=self.overlap_transfers,
+                             telemetry=self.tel, metrics=self.metrics)
+            jax.block_until_ready(carry)
+            dt = time.perf_counter() - t0
+            moved = self.catalog.stats[table].num_rows * 4 \
+                * len(cp.stream_cols) + sum(b.nbytes for b in builds)
+            sp.set(measured_s=dt, measured_bytes=moved)
+            self.tel.ledger.record_plan(phys, dt, moved, mode="stream")
+            return cp.finalize(carry), hit
 
     def morsel_spec(self, table: str, target: Optional[int] = None,
                     n_cols: int = 2) -> MorselSpec:
@@ -537,10 +658,10 @@ class Executor:
         capacity at morsel granularity."""
         key = ("stream", spec.rows) + self._cache_key(node, phys)
         if key in self._compiled:
-            self.cache_hits += 1
+            self.metrics.inc("exec.plan_cache_hits")
             hit = True
         else:
-            self.cache_misses += 1
+            self.metrics.inc("exec.plan_cache_misses")
             self._compiled[key] = self._compile(node, phys, splan,
                                                 rows=spec.rows)
             hit = False
@@ -562,16 +683,16 @@ class Executor:
         yields a compacted output chunk instead of folding a carry."""
         key = ("proj", spec.rows) + self._cache_key(node, phys)
         if key in self._compiled:
-            self.cache_hits += 1
+            self.metrics.inc("exec.plan_cache_hits")
         else:
-            self.cache_misses += 1
+            self.metrics.inc("exec.plan_cache_misses")
             decisions = {p.logical: p
                          for p in _walk_phys(phys)} if phys else {}
             impls = tuple(decisions[j].impl if j in decisions else "xla"
                           for j in pplan.join_nodes)
 
             def bump():
-                self.trace_count += 1
+                self.metrics.inc("exec.trace_count")
 
             self._compiled[key] = pl.compile_project_pipeline(
                 pplan, spec.rows, impls=impls, trace_marker=bump)
@@ -625,6 +746,38 @@ class Executor:
             else {}
         versions = self.catalog.versions() if self.cache is not None \
             else None
+        # bandwidth-ledger attribution: the eager lowering is the ONE
+        # path where every operator can be fenced individually.  Each
+        # evaluated node gets a frame; a node's exclusive time is its
+        # inclusive (fenced) time minus its children's inclusive times,
+        # and measured bytes mirror the cost model's formulas with
+        # ACTUAL cardinalities — so drift isolates estimation error
+        # (bytes) from bandwidth-model error (time)
+        ledger_on = self.tel.enabled and phys is not None
+        frames: list = []        # per live node: [child_incl_s, child_outs]
+
+        def traced_eval(n):
+            if not ledger_on:
+                return eval_node(n)
+            frames.append([0.0, []])
+            t0 = time.perf_counter()
+            out = _fence_value(eval_node(n))
+            incl = time.perf_counter() - t0
+            child_s, child_outs = frames.pop()
+            d = decisions.get(n)
+            if d is not None:
+                self.tel.complete(f"op.{d.op}", t0, incl, impl=d.impl,
+                                  placement=d.placement)
+                self.tel.ledger.record(
+                    op=d.op, impl=d.impl, placement=d.placement,
+                    predicted_bytes=d.n_bytes, predicted_s=d.cost_s,
+                    measured_bytes=_eager_measured_bytes(d, out,
+                                                         child_outs),
+                    measured_s=max(incl - child_s, 0.0), mode="eager")
+            if frames:
+                frames[-1][0] += incl
+                frames[-1][1].append((n, out))
+            return out
 
         def scan_placement(n: L.Scan) -> str:
             cols = n.columns or ("*",)
@@ -643,14 +796,19 @@ class Executor:
         def eval_cached(n) -> Table:
             if self.cache is None or phys is None or \
                     not isinstance(n, (L.Filter, L.FilterProject, L.Join)):
-                return eval_node(n)
+                return traced_eval(n)
             key = ("subplan",
                    L.fingerprint(n, versions, order_sensitive=True))
             entry = self.cache.get(key)
             if entry is not None:
-                self.subplan_hits += 1
+                self.metrics.inc("exec.subplan_cache_hits")
+                # served, not executed: no ledger row, but the parent's
+                # measured-bytes mirror still needs this child's actual
+                # cardinality
+                if ledger_on and frames:
+                    frames[-1][1].append((n, entry.value))
                 return entry.value
-            t = eval_node(n)
+            t = traced_eval(n)
             d = decisions.get(n)
             self.cache.put(
                 key, t, kind="subplan",
@@ -716,7 +874,7 @@ class Executor:
                                         kind=n.kind, epochs=n.epochs)
             raise TypeError(n)
 
-        return eval_node(node)
+        return traced_eval(node)
 
     def _filter_table(self, t: Table, column: str, lo: int, hi: int,
                       keep: Tuple[str, ...], *, impl: str = "xla",
@@ -734,7 +892,7 @@ class Executor:
             bkey = ("bitmap", t.name, version, column, int(lo), int(hi))
             entry = self.cache.get(bkey)
             if entry is not None:
-                self.subplan_hits += 1
+                self.metrics.inc("exec.subplan_cache_hits")
                 idx = entry.value
                 return engine.gather(t, idx,
                                      [c for c in keep if c in t.columns],
@@ -754,9 +912,14 @@ class Executor:
                 idx = self._refine_bitmap(t.column(column), cached_idx,
                                           lo, hi,
                                           chunk_rows=self._refine_chunk())
-                self.subsumption_hits += 1
-                self.refine_bytes_streamed += 3 * cached_idx.nbytes
-                self.refine_bytes_avoided += t.num_rows * 4
+                self.metrics.inc("exec.subsumption_hits")
+                self.metrics.inc("exec.refine_bytes_streamed",
+                                 3 * cached_idx.nbytes)
+                self.metrics.inc("exec.refine_bytes_avoided",
+                                 t.num_rows * 4)
+                self.tel.instant("cache.refine",
+                                 table=t.name, column=column,
+                                 cached_rows=int(cached_idx.shape[0]))
                 # the refined (narrower) bitmap joins the ladder
                 self._admit_bitmap(bkey, idx, interval, t, impl)
                 return engine.gather(
@@ -862,6 +1025,66 @@ def _walk_phys(p: PhysNode):
     yield p
     for c in p.children:
         yield from _walk_phys(c)
+
+
+def _fence_value(value):
+    """Settle async dispatch so a wall-clock stamp bounds *execution*."""
+    if isinstance(value, Table):
+        for c in value.columns.values():
+            jax.block_until_ready(c.data)
+    elif isinstance(value, (tuple, list)):
+        for v in value:
+            _fence_value(v)
+    elif hasattr(value, "block_until_ready"):
+        value.block_until_ready()
+    return value
+
+
+def _rows_of(value) -> float:
+    """Actual output cardinality of an eager operator's materialization."""
+    if isinstance(value, Table):
+        return float(value.num_rows)
+    return 1.0
+
+
+def _eager_measured_bytes(d: PhysNode, out, child_outs) -> float:
+    """Bytes an eager operator ACTUALLY moved — the cost model's n_bytes
+    formulas (plan_physical) evaluated with measured cardinalities instead
+    of estimates.  drift_bytes = predicted/measured therefore isolates the
+    optimizer's cardinality-estimation error: 1.0 exactly when estimates
+    were exact, independent of any bandwidth mis-model (which shows up in
+    drift_time instead)."""
+    B = BYTES_PER_VALUE
+    rows_out = _rows_of(out)
+    kids = [_rows_of(v) for _, v in child_outs]
+    in_rows = kids[0] if kids else rows_out
+    if d.op == "scan":
+        n_cols = len(out.columns) if isinstance(out, Table) else 1
+        return rows_out * B * n_cols
+    if d.op in ("filter", "filter_project"):
+        n_out_cols = len(d.logical.columns) if d.op == "filter_project" \
+            else 1
+        return in_rows * B + rows_out * B * n_out_cols
+    if d.op == "join":
+        probe = kids[0] if kids else rows_out
+        build = kids[1] if len(kids) > 1 else probe
+        return probe * B + build * B / d.n_passes
+    if d.op == "join_multi":
+        probe = max(kids[0] if kids else rows_out, 1.0)
+        build = kids[1] if len(kids) > 1 else probe
+        chain = max(rows_out / probe, 1.0)
+        sort_bytes = build * B * max(math.log2(max(build, 2.0)), 1.0)
+        return probe * B * chain \
+            + (2 * rows_out * B + sort_bytes) / d.n_passes
+    if d.op == "project":
+        return rows_out * B * len(d.logical.columns)
+    if d.op == "aggregate":
+        return in_rows * B
+    if d.op == "train_glm":
+        n = d.logical
+        dataset = in_rows * B * (len(n.features) + 1)
+        return dataset * n.epochs * len(n.grid)
+    return float(d.n_bytes)     # unknown op: mirror the prediction
 
 
 def _value_nbytes(value) -> int:

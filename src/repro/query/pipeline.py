@@ -32,6 +32,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+import time
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -448,8 +449,28 @@ def compile_project_pipeline(pplan: ProjectStreamPlan, rows: int, *,
         pplan.out_cols, jax.jit(step), step)
 
 
+def _account_morsel(telemetry, metrics, i: int, t0: float, t1: float,
+                    t2: float, path: str) -> None:
+    """One morsel's split: transfer-wait (t0..t1 — blocked on staging)
+    vs compute dispatch (t1..t2).  The overlap-effectiveness numbers the
+    ISSUE asks for fall out of the two running sums: with perfect H2D
+    overlap the wait term collapses toward zero."""
+    if metrics is not None:
+        metrics.inc("pipeline.morsels")
+        metrics.inc("pipeline.transfer_wait_s", t1 - t0)
+        metrics.inc("pipeline.compute_s", t2 - t1)
+        metrics.observe("pipeline.morsel_wait_s", t1 - t0)
+        metrics.observe("pipeline.morsel_step_s", t2 - t1)
+    if telemetry is not None:
+        telemetry.complete("pipeline.morsel_wait", t0, t1 - t0,
+                           morsel=i, path=path)
+        telemetry.complete("pipeline.morsel_step", t1, t2 - t1,
+                           morsel=i, path=path)
+
+
 def drive(cp: CompiledPipeline, n_morsels: int, get_morsel, build_flat,
-          lits, carry=None, *, prefetch: bool = True):
+          lits, carry=None, *, prefetch: bool = True,
+          telemetry=None, metrics=None):
     """Run the morsel loop with transfer/compute overlap.
 
     With ``prefetch`` (the default) a background thread pulls morsels
@@ -460,8 +481,14 @@ def drive(cp: CompiledPipeline, n_morsels: int, get_morsel, build_flat,
     ``prefetch=False`` (or ``REPRO_OVERLAP=0`` via the executor) falls
     back to the single-threaded double-buffered loop for determinism
     debugging; both orders fold morsels identically, so results are
-    bit-identical either way."""
+    bit-identical either way.
+
+    ``telemetry``/``metrics`` (both optional, default off) record the
+    per-morsel transfer-wait vs compute split — the direct measurement
+    of how effective the H2D overlap actually is.  When omitted the
+    loops below run exactly the uninstrumented hot path."""
     carry = cp.init_carry() if carry is None else carry
+    instrumented = telemetry is not None and telemetry.enabled
     if prefetch and n_morsels > 1:
         buf: queue.Queue = queue.Queue(maxsize=2)
         failure: list = []
@@ -491,18 +518,49 @@ def drive(cp: CompiledPipeline, n_morsels: int, get_morsel, build_flat,
         t = threading.Thread(target=stage, daemon=True)
         t.start()
         try:
-            for _ in range(n_morsels):
+            for i in range(n_morsels):
+                if not instrumented:
+                    item = buf.get()
+                    if item is None:
+                        break
+                    cur_arrays, n_valid = item
+                    carry = cp.step(lits, carry, n_valid, *build_flat,
+                                    *cur_arrays)
+                    continue
+                t0 = time.perf_counter()
                 item = buf.get()
                 if item is None:
                     break
                 cur_arrays, n_valid = item
+                t1 = time.perf_counter()
                 carry = cp.step(lits, carry, n_valid, *build_flat,
                                 *cur_arrays)
+                _account_morsel(telemetry, metrics, i, t0, t1,
+                                time.perf_counter(), "prefetch")
         finally:
             stop.set()
             t.join()
         if failure:
             raise failure[0]
+        return carry
+    if instrumented:
+        t0 = time.perf_counter()
+        nxt = get_morsel(0)
+        t_stage = time.perf_counter() - t0
+        for i in range(n_morsels):
+            cur_arrays, n_valid = nxt
+            t0 = time.perf_counter()
+            if i + 1 < n_morsels:
+                nxt = get_morsel(i + 1)
+            t1 = time.perf_counter()
+            # in the double-buffered loop the NEXT morsel's staging is
+            # the serial (non-overlapped) transfer term for this step
+            carry = cp.step(lits, carry, n_valid, *build_flat,
+                            *cur_arrays)
+            _account_morsel(telemetry, metrics, i,
+                            t0 - t_stage if i == 0 else t0, t1,
+                            time.perf_counter(), "double_buffer")
+            t_stage = 0.0
         return carry
     nxt = get_morsel(0)
     for i in range(n_morsels):

@@ -44,7 +44,11 @@ class QueryRecord:
     result: object = None
     latency_s: float = 0.0
     path: str = "exec"     # exec | dedup | microbatch | stream | cached
+    # monotonic (time.perf_counter) admission/completion stamps; every
+    # completion path sets both, and latency_s is ALWAYS the sojourn
+    # t_complete - t_submit — queue wait included, never amortized away
     t_submit: float = 0.0
+    t_complete: float = 0.0
 
 
 def _microbatch_key(node: L.Node) -> Optional[tuple]:
@@ -275,16 +279,14 @@ class _MorselStream:
         admission if any dependency version moved mid-flight (the
         restart sweep normally catches that first; this is the
         completion-time check)."""
-        now = time.perf_counter()
         m.rec.result = result
-        m.rec.latency_s = now - m.rec.t_submit
-        m.rec.path = "stream"
+        self.server._complete_rec(m.rec, "stream")
         self.server.history.append(m.rec)
         self.server.n_streamed += 1
         done[m.rec.qid] = result
         for dup in m.dups:
             dup.result = result
-            dup.latency_s = now - dup.t_submit
+            self.server._complete_rec(dup)
             self.server.history.append(dup)
             done[dup.qid] = result
         ex = self.server.executor
@@ -333,6 +335,18 @@ class QueryServer:
         self._streams: Dict[str, _MorselStream] = {}
         self._vsteps: Dict[tuple, object] = {}
 
+    def _complete_rec(self, rec: QueryRecord,
+                      path: Optional[str] = None) -> None:
+        """ONE completion stamp for every serving path: monotonic
+        t_complete, honest sojourn latency (admission to completion,
+        queue wait included), and the sojourn histogram observation."""
+        now = time.perf_counter()
+        rec.t_complete = now
+        rec.latency_s = now - rec.t_submit
+        if path is not None:
+            rec.path = path
+        self.executor.metrics.observe("serve.sojourn_s", rec.latency_s)
+
     def _vstep(self, cp, size: int):
         """Vmapped per-morsel step for a group of ``size`` compatible
         members (size-bucketed to powers of two, like the legacy micro-
@@ -355,7 +369,11 @@ class QueryServer:
             self._pending.append(QueryRecord(qid, node,
                                              t_submit=time.perf_counter()))
             self.n_submitted += 1
-            return qid
+            depth = len(self._pending)
+        self.executor.metrics.set("serve.queue_depth", depth)
+        self.executor.metrics.observe("serve.queue_depth_at_submit",
+                                      depth)
+        return qid
 
     def query(self, q):
         """Convenience: submit one query and drain immediately."""
@@ -374,7 +392,13 @@ class QueryServer:
         self._restart_stale_members()
         with self._lock:
             batch, self._pending = self._pending, []
+        with self.executor.tel.span("serve.pump", admitted=len(batch)):
+            return self._pump_batch(batch)
+
+    def _pump_batch(self, batch: List[QueryRecord]) -> Dict[int, object]:
         t0 = time.perf_counter()
+        if batch:
+            self.executor.metrics.observe("serve.batch_size", len(batch))
         self._hint_shared(batch)
         done: Dict[int, object] = {}
         ran: Dict[L.Node, QueryRecord] = {}   # non-streamable dedup
@@ -387,10 +411,9 @@ class QueryServer:
                 continue
             prior = ran.get(rec.node)
             if prior is not None:
-                rec.path = "dedup"
                 self.n_deduped += 1
                 rec.result = prior.result
-                rec.latency_s = time.perf_counter() - rec.t_submit
+                self._complete_rec(rec, "dedup")
                 self.history.append(rec)
                 done[rec.qid] = rec.result
                 continue
@@ -400,7 +423,7 @@ class QueryServer:
                 continue
             res = self.executor.execute(rec.node)
             rec.result = res.value
-            rec.latency_s = time.perf_counter() - rec.t_submit
+            self._complete_rec(rec)
             self.history.append(rec)
             done[rec.qid] = rec.result
             ran[rec.node] = rec
@@ -421,8 +444,7 @@ class QueryServer:
             return False
         ex.result_hits += 1
         rec.result = entry.value
-        rec.latency_s = time.perf_counter() - rec.t_submit
-        rec.path = "cached"
+        self._complete_rec(rec, "cached")
         self.n_cached += 1
         self.history.append(rec)
         done[rec.qid] = rec.result
@@ -557,7 +579,12 @@ class QueryServer:
             batch, self._pending = self._pending, []
         if not batch:
             return {}
+        with self.executor.tel.span("serve.drain", batch=len(batch)):
+            return self._drain_batch(batch)
+
+    def _drain_batch(self, batch: List[QueryRecord]) -> Dict[int, object]:
         t0 = time.perf_counter()
+        self.executor.metrics.observe("serve.batch_size", len(batch))
         self._hint_shared(batch)
 
         # 1. dedup identical plans (frozen nodes hash structurally)
@@ -591,17 +618,16 @@ class QueryServer:
         # 3. the rest, one executor call each (plan cache still applies;
         # a semantic-cache hit skips execution entirely)
         for rec in singles:
-            t = time.perf_counter()
             res = self.executor.execute(rec.node)
             rec.result = res.value
-            rec.latency_s = time.perf_counter() - t
             if res.result_cache_hit:
                 rec.path = "cached"
                 self.n_cached += 1
+            self._complete_rec(rec)
 
         for rec, src in dups:
             rec.result = src.result
-            rec.latency_s = src.latency_s
+            self._complete_rec(rec)
 
         self._total_drain_s += time.perf_counter() - t0
         self.history.extend(batch)
@@ -609,7 +635,6 @@ class QueryServer:
 
     def _run_microbatch(self, key: tuple, recs: List[QueryRecord]):
         table, cols, fcol, op, acol = key
-        t = time.perf_counter()
         los = [r.node.child.lo for r in recs]
         his = [r.node.child.hi for r in recs]
         size = _next_pow2(len(recs))
@@ -625,12 +650,14 @@ class QueryServer:
         adata = self.executor.placed(table, acol, "partitioned")
         out = jax.device_get(fn(jnp.asarray(los, jnp.int32),
                                 jnp.asarray(his, jnp.int32), fdata, adata))
-        dt = time.perf_counter() - t
         self.n_batches += 1
+        self.executor.metrics.observe("serve.microbatch_size", len(recs))
         for i, rec in enumerate(recs):
             rec.result = out[i].item()
-            rec.latency_s = dt                    # batch-amortized latency
-            rec.path = "microbatch"
+            # sojourn, not the batch-amortized kernel time: a query's
+            # latency is admission -> completion even when a vmapped
+            # batch computed it alongside others
+            self._complete_rec(rec, "microbatch")
             self.n_microbatched += 1
 
     @staticmethod

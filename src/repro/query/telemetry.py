@@ -1,0 +1,512 @@
+"""Query-stack telemetry: spans, metrics, and the bandwidth ledger.
+
+The cost model prices every plan in bytes moved and seconds spent, but
+until now nothing ever checked those predictions against what execution
+actually delivered — exactly the modeled-vs-achieved gap the paper's
+follow-up work (Shuhai, "Benchmarking High Bandwidth Memory on FPGAs")
+exists to close.  This module is the measurement layer:
+
+* **Tracer** — low-overhead nested spans (plan -> optimize -> physical
+  costing -> exec/pipeline -> serve drain) plus instant events, exported
+  as a ``chrome://tracing``-loadable JSON.  Nesting is implicit in the
+  Chrome model: spans on one thread whose ``[ts, ts+dur]`` intervals
+  contain each other render nested.
+* **MetricsRegistry** — named counters and bounded-reservoir latency
+  histograms with a flat ``snapshot()`` dict.  Each ``Executor`` owns a
+  private registry (per-tenant counters stay separable); the tracer and
+  ledger are shared through the process-global :class:`Telemetry` so one
+  Chrome trace covers every tenant.
+* **BandwidthLedger** — per physical operator, the cost model's
+  predicted bytes/seconds next to measured bytes and fenced wall time
+  (``jax.block_until_ready`` so execution is timed, not dispatch), with
+  drift ratios per op and a calibration overlay in exactly the shape
+  ``benchmarks/calibrate.py`` emits and ``CostModel(calibration=...)``
+  consumes — online recalibration is
+  ``model._apply_calibration(ledger.calibration_overlay(model))``.
+
+Everything is env-gated: ``REPRO_TRACE=0`` (the default) makes every
+span a shared no-op singleton and every ledger record an early return —
+the disabled hot path is one attribute check, no allocation retained.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+# --------------------------------------------------------------------------- #
+# gating
+
+def trace_enabled() -> bool:
+    """The REPRO_TRACE gate, parsed in ONE place (mirrors
+    ``cache.cache_disabled``): tracing is opt-in, default off."""
+    return os.environ.get("REPRO_TRACE", "0").lower() in ("1", "on",
+                                                          "yes", "true")
+
+
+# --------------------------------------------------------------------------- #
+# spans
+
+class _NullSpan:
+    """Shared no-op span: the entire disabled path.  One module-level
+    singleton, so a disabled ``tracer.span(...)`` allocates nothing that
+    outlives the call."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, **args) -> "_NullSpan":
+        return self
+
+
+NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    """One live span: records wall-clock bounds on exit and appends the
+    finished event to its tracer."""
+
+    __slots__ = ("tracer", "name", "t0", "args", "tid")
+
+    def __init__(self, tracer: "Tracer", name: str, args: dict):
+        self.tracer = tracer
+        self.name = name
+        self.args = args
+        self.tid = threading.get_ident()
+        self.t0 = time.perf_counter()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.tracer._finish(self.name, self.t0,
+                            time.perf_counter() - self.t0, self.tid,
+                            self.args)
+        return False
+
+    def set(self, **args) -> "_Span":
+        """Attach attributes discovered mid-span (path taken, cache
+        outcome, reason strings)."""
+        self.args.update(args)
+        return self
+
+
+class Tracer:
+    """Span/event recorder.  Thread-safe appends; bounded by
+    ``max_events`` so an always-on CI leg can never grow without limit
+    (overflow is counted, not silently dropped)."""
+
+    def __init__(self, enabled: bool = False, max_events: int = 200_000):
+        self.enabled = enabled
+        self.max_events = max_events
+        self.events: List[dict] = []
+        self.dropped = 0
+        self._epoch = time.perf_counter()
+        self._lock = threading.Lock()
+
+    # -- recording ---------------------------------------------------------- #
+
+    def span(self, name: str, **args):
+        if not self.enabled:
+            return NULL_SPAN
+        return _Span(self, name, args)
+
+    def _finish(self, name: str, t0: float, dur: float, tid: int,
+                args: dict) -> None:
+        self._append({
+            "name": name, "ph": "X", "pid": os.getpid(), "tid": tid,
+            "ts": (t0 - self._epoch) * 1e6, "dur": dur * 1e6,
+            "args": args})
+
+    def complete(self, name: str, t0: float, dur: float, **args) -> None:
+        """Record an already-measured interval (the per-morsel loop times
+        with its own clock and reports here)."""
+        if not self.enabled:
+            return
+        self._finish(name, t0, dur, threading.get_ident(), args)
+
+    def instant(self, name: str, **args) -> None:
+        """Point event (cache admissions/evictions, drift alerts)."""
+        if not self.enabled:
+            return
+        self._append({
+            "name": name, "ph": "i", "s": "t", "pid": os.getpid(),
+            "tid": threading.get_ident(),
+            "ts": (time.perf_counter() - self._epoch) * 1e6,
+            "args": args})
+
+    def _append(self, event: dict) -> None:
+        with self._lock:
+            if len(self.events) >= self.max_events:
+                self.dropped += 1
+                return
+            self.events.append(event)
+
+    # -- export ------------------------------------------------------------- #
+
+    def chrome_trace(self) -> dict:
+        """The ``chrome://tracing`` / Perfetto JSON object format."""
+        with self._lock:
+            events = list(self.events)
+        return {"traceEvents": events,
+                "displayTimeUnit": "ms",
+                "otherData": {"dropped_events": self.dropped}}
+
+    def export_chrome(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f)
+        return path
+
+    def clear(self) -> None:
+        with self._lock:
+            self.events.clear()
+            self.dropped = 0
+
+
+# --------------------------------------------------------------------------- #
+# metrics
+
+_HIST_CAP = 4096                  # bounded reservoir per histogram
+
+
+class MetricsRegistry:
+    """Named counters + bounded latency/size histograms.  Counters are
+    ALWAYS live (they replaced the executor's ad-hoc attributes, so
+    their cost is one dict add either way); histograms are fed by
+    instrumentation sites that gate themselves on the tracer."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: Dict[str, float] = {}
+        self._hists: Dict[str, List[float]] = {}
+
+    # -- counters ----------------------------------------------------------- #
+
+    def inc(self, name: str, by: float = 1) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + by
+
+    def set(self, name: str, value: float) -> None:
+        with self._lock:
+            self._counters[name] = value
+
+    def value(self, name: str, default: float = 0):
+        with self._lock:
+            return self._counters.get(name, default)
+
+    # -- histograms --------------------------------------------------------- #
+
+    def observe(self, name: str, value: float) -> None:
+        with self._lock:
+            h = self._hists.setdefault(name, [])
+            if len(h) < _HIST_CAP:
+                h.append(float(value))
+            else:                      # ring overwrite: keep recent window
+                h[int(self._counters.get(f"{name}.n", 0)) % _HIST_CAP] \
+                    = float(value)
+            self._counters[f"{name}.n"] = \
+                self._counters.get(f"{name}.n", 0) + 1
+
+    def hist_size(self, name: str) -> int:
+        with self._lock:
+            return len(self._hists.get(name, ()))
+
+    # -- reporting ---------------------------------------------------------- #
+
+    def snapshot(self) -> dict:
+        """Flat metrics dict: every counter verbatim, every histogram as
+        ``name.{count,mean,p50,p95,max}``."""
+        with self._lock:
+            out = dict(self._counters)
+            for name, vals in self._hists.items():
+                if not vals:
+                    continue
+                s = sorted(vals)
+                n = len(s)
+                out[f"{name}.count"] = int(self._counters.get(f"{name}.n",
+                                                              n))
+                out[f"{name}.mean"] = sum(s) / n
+                out[f"{name}.p50"] = s[int(0.50 * (n - 1))]
+                out[f"{name}.p95"] = s[int(0.95 * (n - 1))]
+                out[f"{name}.max"] = s[-1]
+            return out
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._hists.clear()
+
+
+# --------------------------------------------------------------------------- #
+# the bandwidth ledger
+
+@dataclasses.dataclass
+class LedgerRow:
+    """One operator execution: the cost model's prediction next to the
+    measurement.  ``attributed=True`` marks rows whose wall time was
+    apportioned from a fused pipeline's single fenced measurement
+    (per-op fencing inside one jitted executable is impossible) — their
+    per-op time drift equals the whole pipeline's."""
+    op: str
+    impl: str
+    placement: str
+    predicted_bytes: float
+    predicted_s: float
+    measured_bytes: float
+    measured_s: float
+    mode: str = "eager"              # eager | fused | stream
+    attributed: bool = False
+
+    @property
+    def drift_bytes(self) -> float:
+        """measured/predicted bytes — the cardinality-estimate error."""
+        return self.measured_bytes / self.predicted_bytes \
+            if self.predicted_bytes else 0.0
+
+    @property
+    def drift_time(self) -> float:
+        """measured/predicted seconds — the bandwidth-model error."""
+        return self.measured_s / self.predicted_s \
+            if self.predicted_s else 0.0
+
+    @property
+    def achieved_gbps(self) -> float:
+        return self.measured_bytes / self.measured_s / 1e9 \
+            if self.measured_s else 0.0
+
+    @property
+    def predicted_gbps(self) -> float:
+        return self.predicted_bytes / self.predicted_s / 1e9 \
+            if self.predicted_s else 0.0
+
+
+class BandwidthLedger:
+    """Accumulates predicted-vs-measured rows; aggregates drift per op
+    and per impl.  Appends are lock-guarded (the streaming server pumps
+    while other tenants execute); reads take a snapshot."""
+
+    def __init__(self, enabled: bool = False, max_rows: int = 100_000):
+        self.enabled = enabled
+        self.max_rows = max_rows
+        self.rows: List[LedgerRow] = []
+        self.dropped = 0
+        self._lock = threading.Lock()
+
+    def record(self, *, op: str, impl: str, placement: str,
+               predicted_bytes: float, predicted_s: float,
+               measured_bytes: float, measured_s: float,
+               mode: str = "eager", attributed: bool = False) -> None:
+        if not self.enabled:
+            return
+        row = LedgerRow(op, impl, placement, float(predicted_bytes),
+                        float(predicted_s), float(measured_bytes),
+                        float(measured_s), mode, attributed)
+        with self._lock:
+            if len(self.rows) >= self.max_rows:
+                self.dropped += 1
+                return
+            self.rows.append(row)
+
+    def record_plan(self, phys, measured_s: float, measured_bytes: float,
+                    *, mode: str) -> None:
+        """Attribute one fused/streamed pipeline's fenced measurement
+        across its physical operators, proportional to each op's share
+        of the predicted cost (bytes pro-rated the same way).  Every
+        costed operator gets a row, so drift is populated plan-wide even
+        when only the pipeline boundary is fenceable."""
+        if not self.enabled or phys is None:
+            return
+        nodes = list(_walk(phys))
+        total_s = sum(p.cost_s for p in nodes) or 1.0
+        total_b = sum(p.n_bytes for p in nodes) or 1.0
+        for p in nodes:
+            self.record(
+                op=p.op, impl=p.impl, placement=p.placement,
+                predicted_bytes=p.n_bytes, predicted_s=p.cost_s,
+                measured_bytes=measured_bytes * (p.n_bytes / total_b),
+                measured_s=measured_s * (p.cost_s / total_s),
+                mode=mode, attributed=True)
+
+    # -- aggregation --------------------------------------------------------- #
+
+    def _snapshot(self) -> List[LedgerRow]:
+        with self._lock:
+            return list(self.rows)
+
+    def drift_by_op(self) -> Dict[str, dict]:
+        """op -> aggregated predicted/measured totals and drift ratios."""
+        agg: Dict[str, dict] = {}
+        for r in self._snapshot():
+            a = agg.setdefault(r.op, {
+                "n": 0, "predicted_bytes": 0.0, "measured_bytes": 0.0,
+                "predicted_s": 0.0, "measured_s": 0.0})
+            a["n"] += 1
+            a["predicted_bytes"] += r.predicted_bytes
+            a["measured_bytes"] += r.measured_bytes
+            a["predicted_s"] += r.predicted_s
+            a["measured_s"] += r.measured_s
+        for a in agg.values():
+            a["drift_bytes"] = a["measured_bytes"] / a["predicted_bytes"] \
+                if a["predicted_bytes"] else 0.0
+            a["drift_time"] = a["measured_s"] / a["predicted_s"] \
+                if a["predicted_s"] else 0.0
+            a["achieved_gbps"] = a["measured_bytes"] / a["measured_s"] \
+                / 1e9 if a["measured_s"] else 0.0
+        return agg
+
+    def top_drift(self, n: int = 5) -> List[dict]:
+        """The operators whose time predictions are furthest off —
+        where online re-costing would change plans first."""
+        agg = self.drift_by_op()
+        rows = [{"op": op, **a} for op, a in agg.items()]
+        rows.sort(key=lambda a: abs(a["drift_time"] - 1.0), reverse=True)
+        return rows[:n]
+
+    def calibration_overlay(self, model) -> dict:
+        """Measured drift folded back into the calibration-file shape
+        ``CostModel._apply_calibration`` consumes: per-impl stream
+        efficiencies scaled by the observed time drift (a pipeline that
+        ran 2x slower than priced implies half the assumed efficiency).
+        Only non-attributed or whole-pipeline evidence exists per impl,
+        so the overlay aggregates everything recorded under that impl.
+        This is the one-liner that makes recalibration online:
+        ``model._apply_calibration(ledger.calibration_overlay(model))``.
+        """
+        by_impl: Dict[str, dict] = {}
+        for r in self._snapshot():
+            a = by_impl.setdefault(r.impl, {"predicted_s": 0.0,
+                                            "measured_s": 0.0,
+                                            "measured_bytes": 0.0})
+            a["predicted_s"] += r.predicted_s
+            a["measured_s"] += r.measured_s
+            a["measured_bytes"] += r.measured_bytes
+        backends = {}
+        for impl, a in by_impl.items():
+            if a["measured_s"] <= 0 or a["predicted_s"] <= 0:
+                continue
+            drift = a["measured_s"] / a["predicted_s"]
+            eff = model.stream_eff.get(impl, 0.7) / drift
+            backends[impl] = {
+                "achieved_gbps": round(a["measured_bytes"]
+                                       / a["measured_s"] / 1e9, 2),
+                "stream_eff": round(min(max(eff, 1e-4), 1.0), 4),
+                "call_overhead_s": model.call_overhead.get(impl, 2e-6),
+            }
+        return {"backend": "ledger", "backends": backends}
+
+    def report(self) -> str:
+        """Human-readable drift report."""
+        agg = self.drift_by_op()
+        if not agg:
+            return "bandwidth ledger: no measurements recorded"
+        lines = [f"{'op':<14} {'n':>4} {'pred MB':>9} {'meas MB':>9} "
+                 f"{'drift(B)':>9} {'pred ms':>9} {'meas ms':>9} "
+                 f"{'drift(t)':>9} {'GB/s':>7}"]
+        for op in sorted(agg):
+            a = agg[op]
+            lines.append(
+                f"{op:<14} {a['n']:>4} "
+                f"{a['predicted_bytes'] / 1e6:>9.2f} "
+                f"{a['measured_bytes'] / 1e6:>9.2f} "
+                f"{a['drift_bytes']:>9.3f} "
+                f"{a['predicted_s'] * 1e3:>9.3f} "
+                f"{a['measured_s'] * 1e3:>9.3f} "
+                f"{a['drift_time']:>9.3f} "
+                f"{a['achieved_gbps']:>7.2f}")
+        return "\n".join(lines)
+
+    def clear(self) -> None:
+        with self._lock:
+            self.rows.clear()
+            self.dropped = 0
+
+
+def _walk(p):
+    yield p
+    for c in p.children:
+        yield from _walk(c)
+
+
+# --------------------------------------------------------------------------- #
+# the facade
+
+class Telemetry:
+    """One tracer + one ledger + one (shared, process-level) metrics
+    registry, gated together.  ``enabled=None`` reads REPRO_TRACE.
+
+    Executors additionally own a PRIVATE MetricsRegistry for their
+    consolidated counters (per-tenant accounting must not mix); this
+    facade's registry aggregates process-wide observations (serve queue
+    depths, drain latencies) when no narrower registry applies.
+    """
+
+    def __init__(self, enabled: Optional[bool] = None):
+        if enabled is None:
+            enabled = trace_enabled()
+        self.enabled = enabled
+        self.tracer = Tracer(enabled)
+        self.ledger = BandwidthLedger(enabled)
+        self.metrics = MetricsRegistry()
+
+    # thin delegates, so instrumentation sites hold one object
+    def span(self, name: str, **args):
+        if not self.enabled:
+            return NULL_SPAN
+        return _Span(self.tracer, name, args)
+
+    def instant(self, name: str, **args) -> None:
+        if self.enabled:
+            self.tracer.instant(name, **args)
+
+    def complete(self, name: str, t0: float, dur: float, **args) -> None:
+        if self.enabled:
+            self.tracer.complete(name, t0, dur, **args)
+
+    def export_chrome(self, path: str) -> str:
+        return self.tracer.export_chrome(path)
+
+    def snapshot(self) -> dict:
+        """Flat process-level metrics + tracer/ledger meta."""
+        out = self.metrics.snapshot()
+        out["trace_events"] = len(self.tracer.events)
+        out["trace_dropped"] = self.tracer.dropped
+        out["ledger_rows"] = len(self.ledger.rows)
+        return out
+
+    def clear(self) -> None:
+        self.tracer.clear()
+        self.ledger.clear()
+        self.metrics.reset()
+
+
+_GLOBAL: Optional[Telemetry] = None
+_GLOBAL_LOCK = threading.Lock()
+
+
+def get() -> Telemetry:
+    """The process-global Telemetry, constructed on first use from the
+    REPRO_TRACE gate.  Executors created without an explicit
+    ``telemetry=`` share this one, so a single Chrome trace covers the
+    whole query stack."""
+    global _GLOBAL
+    with _GLOBAL_LOCK:
+        if _GLOBAL is None:
+            _GLOBAL = Telemetry()
+        return _GLOBAL
+
+
+def set_global(telemetry: Optional[Telemetry]) -> None:
+    """Swap the process-global instance (None re-reads the env gate on
+    next ``get()``) — the test/bench hook for enabling tracing without
+    environment surgery."""
+    global _GLOBAL
+    with _GLOBAL_LOCK:
+        _GLOBAL = telemetry

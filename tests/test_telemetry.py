@@ -1,0 +1,331 @@
+"""Telemetry subsystem: disabled-path zero-overhead guarantees, Chrome
+trace schema/nesting, bandwidth-ledger drift exactness on a plan whose
+cardinality estimates are provably exact, consolidated executor metrics
+(back-compat properties included), and honest serving sojourns."""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.columnar.table import Table
+from repro.query import (
+    Catalog, CostModel, Executor, Q, QueryServer,
+)
+from repro.query import telemetry as tm
+
+
+def _exact_catalog(n=1 << 14, domain=128):
+    """Data on which the optimizer's uniform-domain selectivity estimate
+    is EXACT: ``v`` cycles 0..domain-1 with every value equally frequent
+    (and n a multiple of the domain), so a range predicate's estimated
+    row count equals its measured row count — making the ledger's
+    drift_bytes exactly 1.0 on every operator."""
+    v = (np.arange(n, dtype=np.int32) % domain).astype(np.int32)
+    w = np.ones(n, dtype=np.int32)
+    t = Table.from_arrays("t", {"v": v, "w": w})
+    return Catalog.from_tables(t), v
+
+
+def _scan_filter_sum(lo=10, hi=41):
+    return Q.scan("t", ("v", "w")).filter("v", lo, hi).sum("w")
+
+
+# --------------------------------------------------------------------------- #
+# disabled path
+
+def test_disabled_records_nothing():
+    tel = tm.Telemetry(enabled=False)
+    cat, _ = _exact_catalog(1 << 12)
+    ex = Executor(cat, telemetry=tel)
+    for _ in range(3):
+        ex.execute(_scan_filter_sum())
+        ex.execute(_scan_filter_sum(), mode="eager")
+    assert tel.tracer.events == []
+    assert tel.ledger.rows == []
+    assert tel.tracer.dropped == 0
+
+
+def test_disabled_span_is_shared_singleton():
+    """The disabled path allocates no per-query span objects: every
+    ``span()`` call returns ONE module-level null singleton."""
+    tel = tm.Telemetry(enabled=False)
+    spans = {id(tel.span("a")), id(tel.span("b", k=1)),
+             id(tm.NULL_SPAN)}
+    assert len(spans) == 1
+
+
+def test_disabled_no_container_growth():
+    """No telemetry container grows with query count when disabled."""
+    tel = tm.Telemetry(enabled=False)
+    cat, _ = _exact_catalog(1 << 12)
+    ex = Executor(cat, telemetry=tel)
+    ex.execute(_scan_filter_sum())           # warm compile caches
+    sizes = (len(tel.tracer.events), len(tel.ledger.rows))
+    for i in range(10):
+        ex.execute(_scan_filter_sum(1, 20 + i))
+    assert (len(tel.tracer.events), len(tel.ledger.rows)) == sizes
+
+
+# --------------------------------------------------------------------------- #
+# enabled: Chrome trace schema + nesting
+
+def _interval(e):
+    return e["ts"], e["ts"] + e["dur"]
+
+
+def _contains(outer, inner, slack=1.0):
+    o0, o1 = _interval(outer)
+    i0, i1 = _interval(inner)
+    return o0 - slack <= i0 and i1 <= o1 + slack
+
+
+def test_chrome_trace_schema_and_nesting(tmp_path):
+    tel = tm.Telemetry(enabled=True)
+    cat, _ = _exact_catalog(1 << 12)
+    ex = Executor(cat, telemetry=tel)
+    ex.execute(_scan_filter_sum())
+    path = tel.export_chrome(str(tmp_path / "trace.json"))
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms"
+    assert events, "enabled run must emit events"
+    for e in events:
+        assert set(("name", "ph", "pid", "tid", "ts")) <= set(e)
+        assert e["ph"] in ("X", "i")
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0
+    by_name = {}
+    for e in events:
+        by_name.setdefault(e["name"], []).append(e)
+    # the span hierarchy the ISSUE names: execute > plan > optimize and
+    # physical costing — nested by interval containment on one tid
+    execute = by_name["exec.execute"][0]
+    plan = by_name["exec.plan"][0]
+    for name in ("exec.optimize", "exec.cost_physical"):
+        assert _contains(plan, by_name[name][0])
+    assert _contains(execute, plan)
+    assert execute["args"]["path"] == "batch"
+
+
+def test_trace_bounded_by_max_events():
+    tel = tm.Telemetry(enabled=True)
+    tel.tracer.max_events = 10
+    for i in range(25):
+        tel.instant("e", i=i)
+    assert len(tel.tracer.events) == 10
+    assert tel.tracer.dropped == 15
+    assert tel.tracer.chrome_trace()["otherData"]["dropped_events"] == 15
+
+
+# --------------------------------------------------------------------------- #
+# the bandwidth ledger
+
+def test_eager_ledger_drift_bytes_exact():
+    """On exact-estimate data the eager path's measured bytes reproduce
+    the cost model's predicted bytes operator for operator: drift_bytes
+    == 1.0 for EVERY costed op in the plan."""
+    tel = tm.Telemetry(enabled=True)
+    cat, v = _exact_catalog()
+    ex = Executor(cat, telemetry=tel)
+    q = _scan_filter_sum(10, 41)
+    r = ex.execute(q, mode="eager")
+    assert int(r.value) == int(((v >= 10) & (v <= 41)).sum())
+    phys_ops = sorted(p.op for p in _walk(ex.plan(
+        q.node if hasattr(q, "node") else q)[1]))
+    assert sorted(row.op for row in tel.ledger.rows) == phys_ops
+    for row in tel.ledger.rows:
+        assert row.mode == "eager" and not row.attributed
+        assert row.drift_bytes == pytest.approx(1.0, rel=1e-6), row.op
+        assert row.measured_s >= 0.0
+        assert row.predicted_s > 0.0
+
+
+def _walk(p):
+    yield p
+    for c in p.children:
+        yield from _walk(c)
+
+
+def test_fused_ledger_covers_every_costed_operator():
+    tel = tm.Telemetry(enabled=True)
+    cat, _ = _exact_catalog(1 << 12)
+    ex = Executor(cat, telemetry=tel)
+    q = _scan_filter_sum()
+    ex.execute(q)                                 # fused batch path
+    node = q.node if hasattr(q, "node") else q
+    n_ops = len(list(_walk(ex.plan(node)[1])))
+    fused = [r for r in tel.ledger.rows if r.mode == "fused"]
+    assert len(fused) == n_ops
+    assert all(r.attributed for r in fused)
+    assert all(r.measured_bytes > 0 for r in fused)
+
+
+def test_stream_ledger_and_morsel_metrics():
+    tel = tm.Telemetry(enabled=True)
+    cat, v = _exact_catalog()
+    ex = Executor(cat, telemetry=tel)
+    q = _scan_filter_sum(0, 63)
+    r = ex.execute(q, mode="stream", morsel_rows=1 << 12)
+    assert int(r.value) == int(((v >= 0) & (v <= 63)).sum())
+    assert r.mode == "stream"
+    streamed = [row for row in tel.ledger.rows if row.mode == "stream"]
+    assert streamed and all(row.attributed for row in streamed)
+    snap = ex.metrics_snapshot()
+    assert snap["pipeline.morsels"] >= 2
+    assert snap["pipeline.transfer_wait_s"] >= 0.0
+    assert snap["pipeline.compute_s"] > 0.0
+    names = {e["name"] for e in tel.tracer.events}
+    assert "pipeline.morsel_step" in names
+    assert "exec.run_stream" in names
+
+
+def test_calibration_overlay_feeds_cost_model():
+    """The ledger's overlay is consumable where calibrate.py's file is:
+    recalibration is the documented one-liner."""
+    tel = tm.Telemetry(enabled=True)
+    cat, _ = _exact_catalog(1 << 12)
+    ex = Executor(cat, telemetry=tel)
+    ex.execute(_scan_filter_sum(), mode="eager")
+    overlay = tel.ledger.calibration_overlay(ex.cost_model)
+    assert overlay["backend"] == "ledger"
+    assert "xla" in overlay["backends"]
+    b = overlay["backends"]["xla"]
+    assert 0.0 < b["stream_eff"] <= 1.0
+    model = CostModel(ex.cost_model.n_engines, calibration=overlay)
+    assert model.calibrated_from == "ledger"
+    assert model.stream_eff["xla"] == pytest.approx(b["stream_eff"])
+    # and the online form: fold measurements into a LIVE model
+    ex.cost_model._apply_calibration(overlay)
+    assert ex.cost_model.calibrated_from == "ledger"
+
+
+def test_drift_report_and_top_drift():
+    tel = tm.Telemetry(enabled=True)
+    cat, _ = _exact_catalog(1 << 12)
+    ex = Executor(cat, telemetry=tel)
+    ex.execute(_scan_filter_sum(), mode="eager")
+    rep = tel.ledger.report()
+    for op in ("scan", "filter", "aggregate"):
+        assert op in rep
+    top = tel.ledger.top_drift(2)
+    assert len(top) == 2
+    assert abs(top[0]["drift_time"] - 1.0) >= \
+        abs(top[1]["drift_time"] - 1.0)
+    assert tm.Telemetry(enabled=True).ledger.report() \
+        == "bandwidth ledger: no measurements recorded"
+
+
+# --------------------------------------------------------------------------- #
+# consolidated executor metrics
+
+def test_counters_consolidated_with_backcompat_names():
+    tel = tm.Telemetry(enabled=False)
+    cat, _ = _exact_catalog(1 << 12)
+    ex = Executor(cat, telemetry=tel)
+    q = _scan_filter_sum()
+    ex.execute(q)
+    ex.execute(q)
+    # old attribute names read through to the registry
+    assert ex.cache_misses == 1 and ex.cache_hits == 1
+    assert ex.metrics.value("exec.plan_cache_misses") == 1
+    assert ex.metrics.value("exec.plan_cache_hits") == 1
+    # external writers still work (serve.py does ``ex.result_hits += 1``)
+    ex.result_hits += 1
+    assert ex.metrics.value("exec.result_cache_hits") == 1
+    snap = ex.metrics_snapshot()
+    assert snap["exec.plan_cache_hits"] == 1
+    ex.reset_metrics()
+    assert ex.cache_hits == 0 and ex.result_hits == 0
+    # stats_dict's legacy keys survive the consolidation
+    sd = ex.stats_dict()
+    assert sd["plan_cache_hits"] == 0
+    assert "trace_count" in sd
+
+
+def test_private_registries_do_not_mix():
+    cat, _ = _exact_catalog(1 << 12)
+    tel = tm.Telemetry(enabled=False)
+    ex1 = Executor(cat, telemetry=tel)
+    ex2 = Executor(cat, telemetry=tel)
+    ex1.execute(_scan_filter_sum())
+    assert ex1.cache_misses == 1
+    assert ex2.cache_misses == 0
+
+
+# --------------------------------------------------------------------------- #
+# serving sojourns
+
+def test_server_sojourn_includes_queue_wait():
+    """A query's latency is admission -> completion, not the amortized
+    kernel time: sleeping between submit and drain must show up."""
+    cat, _ = _exact_catalog(1 << 12)
+    ex = Executor(cat, telemetry=tm.Telemetry(enabled=False))
+    srv = QueryServer(ex)
+    wait = 0.05
+    # two compatible selections force the micro-batch path; the third is
+    # a lone single through the executor
+    srv.submit(_scan_filter_sum(1, 10))
+    srv.submit(_scan_filter_sum(2, 20))
+    srv.submit(Q.scan("t", ("v", "w")).filter("v", 0, 5)
+               .aggregate("count", "v"))
+    time.sleep(wait)
+    srv.drain()
+    assert len(srv.history) == 3
+    for rec in srv.history:
+        assert rec.t_complete > rec.t_submit > 0.0
+        assert rec.latency_s >= wait
+        assert rec.latency_s == pytest.approx(
+            rec.t_complete - rec.t_submit)
+    assert {r.path for r in srv.history} == {"microbatch", "exec"}
+    snap = ex.metrics_snapshot()
+    assert snap["serve.sojourn_s.count"] == 3
+    assert snap["serve.sojourn_s.p50"] >= wait
+    assert snap["serve.batch_size.max"] == 3
+
+
+def test_streaming_server_sojourns_are_stamped():
+    cat, _ = _exact_catalog()
+    ex = Executor(cat, telemetry=tm.Telemetry(enabled=False))
+    srv = QueryServer(ex, streaming=True, morsel_rows=1 << 12)
+    srv.submit(_scan_filter_sum(5, 60))
+    srv.submit(_scan_filter_sum(5, 60))      # dedup rider
+    out = srv.drain()
+    assert len(out) == 2
+    for rec in srv.history:
+        assert rec.t_complete > rec.t_submit
+        assert rec.latency_s == pytest.approx(
+            rec.t_complete - rec.t_submit)
+    assert {r.path for r in srv.history} == {"stream", "dedup"}
+
+
+# --------------------------------------------------------------------------- #
+# registry mechanics
+
+def test_metrics_registry_snapshot_and_histograms():
+    m = tm.MetricsRegistry()
+    m.inc("a")
+    m.inc("a", 4)
+    m.set("g", 7)
+    for x in (1.0, 2.0, 3.0, 4.0):
+        m.observe("h", x)
+    snap = m.snapshot()
+    assert snap["a"] == 5 and snap["g"] == 7
+    assert snap["h.count"] == 4
+    assert snap["h.mean"] == pytest.approx(2.5)
+    assert snap["h.max"] == 4.0
+    m.reset()
+    assert m.snapshot() == {}
+
+
+def test_global_telemetry_swap():
+    tel = tm.Telemetry(enabled=True)
+    tm.set_global(tel)
+    try:
+        assert tm.get() is tel
+        cat, _ = _exact_catalog(1 << 12)
+        ex = Executor(cat)                   # no explicit telemetry
+        assert ex.tel is tel
+    finally:
+        tm.set_global(None)
