@@ -18,6 +18,7 @@ def main() -> None:
     from benchmarks.bench_join_duplicates import join_duplicates
     from benchmarks.bench_observability import (
         observability_figures, observability_smoke)
+    from benchmarks.bench_qos import qos_figures, qos_smoke
     from benchmarks.calibrate import calibrate
     smoke = "--smoke" in sys.argv
 
@@ -31,15 +32,17 @@ def main() -> None:
     # join_duplicates / cache_figures run full-scale only: smoke mode
     # keeps the two fast figures, and the bench_*.py --smoke entry points
     # cover the smoke case
-    fns = ALL + [join_duplicates, cache_figures, observability_figures]
+    fns = ALL + [join_duplicates, cache_figures, observability_figures,
+                 qos_figures]
     if smoke:
         # subsumption_smoke exercises the refine path + shared cache at
         # smoke scale without clobbering the committed BENCH_cache.json;
         # observability_smoke writes BENCH_observability.json + the
-        # Chrome trace artifact on every smoke run
+        # Chrome trace artifact on every smoke run; qos_smoke hard-gates
+        # the adaptive-replan correctness invariants
         fns = [fn for fn in ALL if fn.__name__ in
                ("fig2_bandwidth", "tab3_roofline")] + \
-              [subsumption_smoke, observability_smoke]
+              [subsumption_smoke, observability_smoke, qos_smoke]
     if only:
         fns = [fn for fn in fns if only in fn.__name__]
 

@@ -32,7 +32,9 @@ from repro.query.pipeline import (                               # noqa: F401
 from repro.query.exec import (                                   # noqa: F401
     Catalog, Executor, PlacementCapacityError, Result, sql_like_query,
 )
-from repro.query.serve import QueryRecord, QueryServer           # noqa: F401
+from repro.query.serve import (                                  # noqa: F401
+    AdaptivePolicy, QueryRecord, QueryServer, TenantSpec,
+)
 from repro.query.telemetry import (                              # noqa: F401
     BandwidthLedger, LedgerRow, MetricsRegistry, Telemetry, Tracer,
     set_global, trace_enabled,

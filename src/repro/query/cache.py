@@ -72,6 +72,8 @@ class CacheEntry:
     tick: int = 0                        # last-touch order (LRU tiebreak)
     # (table, column, version, lo, hi) for interval-indexed bitmaps
     interval: Optional[Tuple[str, str, int, int, int]] = None
+    # owning tenant (None = shared/unattributed) for byte-share accounting
+    tenant: Optional[str] = None
 
     def score(self, model) -> float:
         return model.cache_score(self.recompute_s, self.n_bytes,
@@ -108,6 +110,11 @@ class SemanticCache:
         # threads admit/evict), so index and byte accounting must never
         # be observed mid-update
         self._lock = threading.RLock()
+        # tenant -> relative weight; a tenant's byte cap is its weight's
+        # share of the whole budget (weight / sum(weights) * budget).
+        # Empty = no QoS partitioning, every put is uncapped (legacy).
+        self._tenant_shares: Dict[str, float] = {}
+        self._tenant_bytes: Dict[str, int] = {}
         self._seen_versions: Dict[str, int] = {}
         self._tick = 0
         self.used_bytes = 0
@@ -220,22 +227,51 @@ class SemanticCache:
         with self._lock:
             self._hinted = set(keys)
 
+    def set_tenant_shares(self, shares: Mapping[str, float]) -> None:
+        """Install per-tenant relative weights (QoS byte-budget shares).
+        A registered tenant may hold at most
+        ``weight / sum(weights) * budget_bytes`` resident bytes; over-cap
+        admissions first evict that tenant's OWN lower-scored entries,
+        then reject — one tenant's churn can never displace another's
+        share.  Entries with ``tenant=None`` (or an unregistered tenant)
+        stay uncapped, so a share-free cache behaves exactly as before."""
+        with self._lock:
+            self._tenant_shares = {str(k): float(v)
+                                   for k, v in shares.items() if v > 0}
+
+    def tenant_cap_bytes(self, tenant: Optional[str]) -> Optional[int]:
+        """Resident-byte cap for ``tenant`` under the installed shares,
+        or None when uncapped (no shares, unknown tenant, or None)."""
+        with self._lock:
+            return self._tenant_cap_locked(tenant)
+
+    def _tenant_cap_locked(self, tenant) -> Optional[int]:
+        if tenant is None or not self._tenant_shares:
+            return None
+        w = self._tenant_shares.get(tenant)
+        if w is None:
+            return None
+        total = sum(self._tenant_shares.values())
+        return int(self.budget_bytes * w / total)
+
     def put(self, key: Hashable, value: object, *, kind: str,
             n_bytes: int, recompute_s: float,
             tables: Iterable[str] = (),
-            interval: Optional[Tuple[str, str, int, int, int]] = None
-            ) -> bool:
+            interval: Optional[Tuple[str, str, int, int, int]] = None,
+            tenant: Optional[str] = None) -> bool:
         """Priced admission.  Returns whether the entry was admitted.
         ``interval=(table, column, version, lo, hi)`` registers a
         selection bitmap in the subsumption index, making it a candidate
-        superset for narrower lookups at the same version."""
+        superset for narrower lookups at the same version.  ``tenant``
+        attributes the bytes for QoS share enforcement (see
+        ``set_tenant_shares``)."""
         with self._lock:
             return self._put_locked(key, value, kind=kind, n_bytes=n_bytes,
                                     recompute_s=recompute_s, tables=tables,
-                                    interval=interval)
+                                    interval=interval, tenant=tenant)
 
     def _put_locked(self, key, value, *, kind, n_bytes, recompute_s,
-                    tables, interval) -> bool:
+                    tables, interval, tenant=None) -> bool:
         n_bytes = max(int(n_bytes), 0)
         if n_bytes > self.budget_bytes:
             self.rejected += 1
@@ -251,16 +287,52 @@ class SemanticCache:
             self._drop(old)
         cand = CacheEntry(key, kind, value, n_bytes, recompute_s,
                           tuple(tables), hits=1 if hinted else 0,
-                          interval=interval)
+                          interval=interval, tenant=tenant)
         score = cand.score(self.model)
-        need = self.used_bytes + n_bytes - self.budget_bytes
         victims = []
+        seen = set()
+        # tenant share first: free the OWNER's bytes down to its cap by
+        # evicting its own lower-scored entries, never another tenant's
+        cap = self._tenant_cap_locked(tenant)
+        if cap is not None:
+            if n_bytes > cap:
+                self.rejected += 1
+                if self.tel.enabled:
+                    self.tel.instant(
+                        "cache.reject", kind=kind, reason="tenant_share",
+                        tenant=tenant, n_bytes=n_bytes, cap=cap)
+                return False
+            t_need = (self._tenant_bytes.get(tenant, 0) + n_bytes - cap)
+            if t_need > 0:
+                own = [e for e in self._entries.values()
+                       if e.tenant == tenant]
+                for e in sorted(own, key=lambda e: (e.score(self.model),
+                                                    e.tick)):
+                    if e.score(self.model) >= score:
+                        break
+                    victims.append(e)
+                    seen.add(e.key)
+                    t_need -= e.n_bytes
+                    if t_need <= 0:
+                        break
+                if t_need > 0:
+                    self.rejected += 1
+                    if self.tel.enabled:
+                        self.tel.instant(
+                            "cache.reject", kind=kind,
+                            reason="tenant_share", tenant=tenant,
+                            n_bytes=n_bytes, cap=cap, score=score)
+                    return False
+        need = (self.used_bytes - sum(v.n_bytes for v in victims)
+                + n_bytes - self.budget_bytes)
         if need > 0:
             # evict cheapest-to-rebuild-per-byte first, oldest breaking
             # ties; stop (and reject) before displacing anything the
             # model prices above the candidate
             for e in sorted(self._entries.values(),
                             key=lambda e: (e.score(self.model), e.tick)):
+                if e.key in seen:
+                    continue
                 if e.score(self.model) >= score:
                     break
                 victims.append(e)
@@ -285,6 +357,9 @@ class SemanticCache:
         cand.tick = self._tick
         self._entries[key] = cand
         self.used_bytes += n_bytes
+        if tenant is not None:
+            self._tenant_bytes[tenant] = (
+                self._tenant_bytes.get(tenant, 0) + n_bytes)
         self.admitted += 1
         if self.tel.enabled:
             self.tel.instant("cache.admit", kind=kind, n_bytes=n_bytes,
@@ -298,6 +373,12 @@ class SemanticCache:
     def _drop(self, e: CacheEntry) -> None:
         del self._entries[e.key]
         self.used_bytes -= e.n_bytes
+        if e.tenant is not None:
+            left = self._tenant_bytes.get(e.tenant, 0) - e.n_bytes
+            if left > 0:
+                self._tenant_bytes[e.tenant] = left
+            else:
+                self._tenant_bytes.pop(e.tenant, None)
         if e.interval is not None:
             table, column, version, _, _ = e.interval
             bucket = self._intervals.get((table, column, int(version)))
@@ -348,6 +429,7 @@ class SemanticCache:
             self._entries.clear()
             self._intervals.clear()
             self._hinted.clear()
+            self._tenant_bytes.clear()
             self.used_bytes = 0
 
     # -- reporting ------------------------------------------------------------ #
@@ -376,4 +458,8 @@ class SemanticCache:
             "semantic_cache_rejected": self.rejected,
             "semantic_cache_evicted": self.evicted,
             "semantic_cache_invalidated": self.invalidated,
+            "semantic_cache_tenant_bytes": dict(self._tenant_bytes),
+            "semantic_cache_tenant_caps": {
+                t: self._tenant_cap_locked(t)
+                for t in self._tenant_shares},
         }

@@ -202,15 +202,39 @@ class CostModel:
         self.call_overhead = {"xla": XLA_CALL_OVERHEAD,
                               "pallas": PALLAS_CALL_OVERHEAD}
         self.h2d_gbps = H2D_GBPS
+        # the PRISTINE per-backend constants, captured before any overlay
+        # ever touches the live dicts: every calibration application
+        # re-baselines against these, so applying the same overlay twice
+        # (or overlapping online overlays) can never compound
+        self._baseline = {"stream_eff": dict(self.stream_eff),
+                          "call_overhead": dict(self.call_overhead),
+                          "h2d_gbps": self.h2d_gbps}
         self.calibrated_from = None
+        self.n_calibrations = 0
         if calibration:
             self._apply_calibration(calibration)
 
+    def apply_calibration(self, calibration: dict) -> None:
+        """Public recalibration surface (the executor's ``recost()`` entry
+        point): idempotent overlay application — see
+        ``_apply_calibration``."""
+        self._apply_calibration(calibration)
+
     def _apply_calibration(self, calibration: dict) -> None:
-        """Overlay measured per-backend numbers on the fixed constants.
-        Efficiencies are clamped to (0, 1]; missing backends keep their
-        defaults, so a partial calibration (e.g. no pallas off-TPU) is
-        fine."""
+        """Overlay measured per-backend numbers on the PRISTINE constants.
+
+        Application is IDEMPOTENT: the live dicts are reset to the
+        baseline captured at construction before the overlay lands, so an
+        overlay describes an absolute state, never a delta on top of a
+        previous overlay.  Repeatedly applying the same overlay (the
+        serve-side recalibration loop can fire on overlapping evidence)
+        therefore leaves every price unchanged, and a backend the overlay
+        does not mention re-baselines to its pristine default rather than
+        inheriting a stale earlier overlay.  Efficiencies are clamped to
+        (0, 1]; a partial calibration (e.g. no pallas off-TPU) is fine."""
+        self.stream_eff = dict(self._baseline["stream_eff"])
+        self.call_overhead = dict(self._baseline["call_overhead"])
+        self.h2d_gbps = self._baseline["h2d_gbps"]
         for impl, meas in calibration.get("backends", {}).items():
             if impl not in self.stream_eff:
                 continue
@@ -224,6 +248,7 @@ class CostModel:
         if h2d and h2d > 0:
             self.h2d_gbps = float(h2d)
         self.calibrated_from = calibration.get("backend", "measured")
+        self.n_calibrations += 1
 
     def impls(self) -> Tuple[str, ...]:
         return ("xla", "pallas") if self.allow_pallas else ("xla",)

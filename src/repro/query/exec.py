@@ -163,8 +163,18 @@ class Executor:
                  cache_bytes: Optional[int] = None,
                  semantic_cache: Optional[SemanticCache] = None,
                  overlap_transfers: Optional[bool] = None,
-                 telemetry: Optional[tm.Telemetry] = None):
+                 telemetry: Optional[tm.Telemetry] = None,
+                 tenant: Optional[str] = None):
         self.catalog = catalog
+        # tenant label every semantic-cache admission carries: with
+        # per-tenant byte-budget shares configured on a SHARED cache,
+        # this executor's entries are accounted against (and capped by)
+        # its tenant's share
+        self.tenant = tenant
+        # cost-model epoch: bumped by every recost(); part of the
+        # compiled-plan cache key, so physical plans priced under a
+        # superseded model are never silently reused
+        self.cost_epoch = 0
         # spans + bandwidth ledger are shared (default: the process
         # global, REPRO_TRACE-gated); the metrics registry is PRIVATE so
         # multi-tenant counters never mix
@@ -281,6 +291,37 @@ class Executor:
         if drifted and self.cache is not None:
             self.cache.sync_versions(self.catalog.versions())
 
+    # -- online re-costing ---------------------------------------------------- #
+
+    def recost(self, calibration: Optional[dict] = None) -> int:
+        """Fold a calibration overlay into the live cost model and bump
+        the cost-model EPOCH — the serve-side recalibration entry point.
+
+        ``calibration=None`` re-reads ``BENCH_calibration.json`` (the
+        construction-time source), so a long-lived server can pick up a
+        fresh offline benchmark run; passing a dict (usually
+        ``ledger.calibration_overlay(model)``) applies online evidence.
+        Application is idempotent (the model re-baselines against its
+        pristine constants), and every cost-derived memo is flushed:
+        memoized (opt, phys) plans and fingerprints re-derive, and the
+        epoch's presence in ``_cache_key`` keeps compiled executables,
+        stream pipelines and their physical decisions from being served
+        across the re-cost boundary.  Already-running streams are NOT
+        touched — in-flight members finish on the pipeline they were
+        admitted with; only subsequent plans see the new prices."""
+        if calibration is None:
+            calibration = load_calibration()
+        if calibration:
+            self.cost_model.apply_calibration(calibration)
+        self.cost_epoch += 1
+        self._planned.clear()
+        self._fps.clear()
+        self.metrics.inc("exec.recost_count")
+        self.metrics.set("exec.cost_epoch", self.cost_epoch)
+        self.tel.instant("exec.recost", epoch=self.cost_epoch,
+                         calibrated_from=self.cost_model.calibrated_from)
+        return self.cost_epoch
+
     def fingerprint_of(self, node: L.Node) -> str:
         """Semantic fingerprint of the OPTIMIZED form of ``node`` against
         current table versions — the result-cache key (memoized; the memo
@@ -391,7 +432,7 @@ class Executor:
         self.cache.put(("result", self.fingerprint_of(orig)), value,
                        kind="result", n_bytes=_value_nbytes(value),
                        recompute_s=phys.total_cost_s,
-                       tables=L.tables_of(opt))
+                       tables=L.tables_of(opt), tenant=self.tenant)
 
     def plan(self, node: L.Node):
         """optimize + plan_physical, memoized by the (hashable) logical
@@ -504,8 +545,11 @@ class Executor:
                       if isinstance(n, L.Scan)}))
         decisions = tuple((p.op, p.impl, p.placement, p.n_passes)
                           for p in _walk_phys(phys)) if phys else ()
+        # cost_epoch: a recost() invalidates every compiled plan even
+        # when the physical decisions happen to coincide — morsel-rows
+        # and pricing context are not part of ``decisions``
         return (L.signature(node), shapes, decisions,
-                self.cost_model.n_engines)
+                self.cost_model.n_engines, self.cost_epoch)
 
     def _compile(self, node: L.Node, phys: Optional[PhysNode],
                  splan: pl.StreamPlan, *, rows: Optional[int]):
@@ -577,7 +621,7 @@ class Executor:
                     recompute_s=self.cost_model.build_price(
                         self.catalog.stats[b.table].num_rows,
                         len(b.value_cols)),
-                    tables=(b.table,))
+                    tables=(b.table,), tenant=self.tenant)
                 flat.extend(arrays)
                 continue
             key = (b, version)
@@ -814,7 +858,7 @@ class Executor:
                 key, t, kind="subplan",
                 n_bytes=sum(c.data.nbytes for c in t.columns.values()),
                 recompute_s=d.total_cost_s if d is not None else 0.0,
-                tables=L.tables_of(n))
+                tables=L.tables_of(n), tenant=self.tenant)
             return t
 
         def eval_node(n) -> Table:
@@ -958,7 +1002,7 @@ class Executor:
             bkey, idx, kind="bitmap", n_bytes=idx.nbytes,
             recompute_s=self.cost_model.stream_cost(
                 t.num_rows * 4, impl=impl, placement="partitioned"),
-            tables=(t.name,), interval=interval)
+            tables=(t.name,), interval=interval, tenant=self.tenant)
 
     def _refine_chunk(self) -> Optional[int]:
         """Refinement granularity: None (eager, one gather) in the
@@ -1009,6 +1053,8 @@ class Executor:
             "cached_builds": len(self._builds),
             "cached_morsels": len(self._morsels),
             "cost_model_calibrated_from": self.cost_model.calibrated_from,
+            "cost_epoch": self.cost_epoch,
+            "recost_count": int(self.metrics.value("exec.recost_count")),
             "result_cache_hits": self.result_hits,
             "subplan_cache_hits": self.subplan_hits,
             "build_cache_hits": self.build_hits,

@@ -18,6 +18,29 @@ Two serving disciplines share one ``submit()`` surface:
 
 Per-query latency, throughput, dedup/stream counters, and the executor's
 plan-cache hit rate come back from ``stats()``.
+
+**Adaptive serving** (``policy=AdaptivePolicy(...)``): the server closes
+the measure→re-cost→re-plan loop.  Streaming pumps fence each morsel
+advance and feed the bandwidth ledger (``record_plan(..., scale=1/
+n_morsels)``); ``_maybe_recalibrate`` watches windowed drift
+(``BandwidthLedger.window_drift``) and, after K consecutive breaching
+windows, folds ``ledger.calibration_overlay(model)`` into the cost model
+via ``Executor.recost()`` — bumping the cost epoch so every plan-cache
+key rolls over.  In-flight streaming members stay PINNED to their
+original compiled pipeline (groups are keyed by compiled-object
+identity, and recost never touches live groups); only subsequently
+admitted queries see the re-costed plans, so a mid-stream recalibration
+can never mix morsel chunks from two physical plans.
+
+**QoS admission** (``register_tenant(TenantSpec(...))``): submissions
+carry a tenant; admission is ordered by (priority desc, deadline,
+submit time) in both disciplines, tenants get fair byte-budget shares of
+the shared ``SemanticCache`` (``cache_share`` weights →
+``SemanticCache.set_tenant_shares``), and the streaming pump applies
+backpressure — when the recent sojourn p95 breaches the strictest
+registered SLO, below-top-priority admissions are deferred to a later
+pump (bounded by a starvation guard) so the high-priority tenant's tail
+recovers first.
 """
 from __future__ import annotations
 
@@ -49,6 +72,41 @@ class QueryRecord:
     # t_complete - t_submit — queue wait included, never amortized away
     t_submit: float = 0.0
     t_complete: float = 0.0
+    # QoS: owning tenant, its priority at submit, absolute deadline
+    # (t_submit + deadline_s; inf = none), and how many pumps
+    # backpressure has deferred this record (starvation guard input)
+    tenant: str = "default"
+    priority: int = 0
+    deadline: float = float("inf")
+    n_deferred: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's QoS contract.  ``priority`` orders admission (higher
+    first); ``slo_p95_s`` is the sojourn-p95 target backpressure defends
+    (None = best-effort); ``cache_share`` is this tenant's relative
+    weight of the shared semantic-cache byte budget (see
+    ``SemanticCache.set_tenant_shares``)."""
+    name: str
+    priority: int = 0
+    slo_p95_s: Optional[float] = None
+    cache_share: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptivePolicy:
+    """When to fold ledger evidence back into the cost model.  A window
+    is one ``window_drift`` call with at least ``min_window_rows`` new
+    ledger rows; it BREACHES when any impl's ``|drift_time - 1|``
+    exceeds ``drift_threshold``.  After ``k_windows`` consecutive
+    breaches the server applies ``calibration_overlay`` via
+    ``Executor.recost()`` (epoch bump → plan caches roll over) and
+    restarts the evidence window, so rows measured against the old model
+    never contaminate the next overlay."""
+    drift_threshold: float = 0.5
+    k_windows: int = 2
+    min_window_rows: int = 8
 
 
 def _microbatch_key(node: L.Node) -> Optional[tuple]:
@@ -97,7 +155,8 @@ class _ProjectMember:
 
     def __init__(self, rec: QueryRecord, cpj, builds, lits, remaining: int,
                  fp: Optional[str],
-                 dep_versions: Optional[Dict[str, int]] = None):
+                 dep_versions: Optional[Dict[str, int]] = None,
+                 phys=None):
         self.rec = rec
         self.cpj = cpj
         self.builds = builds
@@ -107,6 +166,8 @@ class _ProjectMember:
         self.fp = fp
         self.dep_versions = dep_versions or {}
         self.dups: List[QueryRecord] = []
+        self.phys = phys               # pinned physical plan (ledger rows)
+        self.n_advances = 0            # ledger warmup gate (jit skew)
 
     def finalize(self) -> Table:
         order = sorted(self.chunks)
@@ -124,13 +185,21 @@ class _Group:
     pipelines the admission-batch server can only execute one by one.
     Stacks are rebuilt only when membership changes, never per morsel."""
 
-    def __init__(self, cp, builds):
+    def __init__(self, cp, builds, phys=None):
         self.cp = cp
         self.builds = builds
+        # the physical plan this group was attached under — PINNED for
+        # the group's lifetime: a mid-stream recost produces new compiled
+        # pipelines (epoch is in the compile key), so later admissions
+        # form NEW groups while this one finishes on its original plan,
+        # and its ledger rows keep attributing against the plan that
+        # actually priced the work
+        self.phys = phys
         self.members: List[_StreamMember] = []
         self.lits = None                  # stacked, padded to size bucket
         self.carry = None
         self.size = 0
+        self.n_advances = 0               # ledger warmup gate (jit skew)
 
     def writeback(self):
         """Unstack the group carry into the members (before membership
@@ -145,6 +214,9 @@ class _Group:
                         lambda x, i=i: x[i], self.carry)
         self.lits = self.carry = None
         self.size = 0
+        # membership changed: the next advance may land in a new vmap
+        # size bucket (fresh compile), so the ledger warmup gate resets
+        self.n_advances = 0
 
     def restack(self):
         n = len(self.members)
@@ -172,6 +244,7 @@ class _MorselStream:
         self.table = table
         self.spec = spec
         self.pos = 0
+        self.epoch = 0                 # cost epoch the spec was priced at
         self.groups: Dict[int, _Group] = {}
         self.proj_members: List[_ProjectMember] = []
 
@@ -182,11 +255,11 @@ class _MorselStream:
 
     def attach(self, rec: QueryRecord, cp, builds, lits,
                fp: Optional[str] = None,
-               dep_versions: Optional[Dict[str, int]] = None
-               ) -> _StreamMember:
+               dep_versions: Optional[Dict[str, int]] = None,
+               phys=None) -> _StreamMember:
         g = self.groups.get(id(cp))
         if g is None:
-            g = self.groups[id(cp)] = _Group(cp, builds)
+            g = self.groups[id(cp)] = _Group(cp, builds, phys)
         else:
             # the group can outlive a build-side mutation (same compiled
             # pipeline, new version-keyed build arrays): always take the
@@ -202,10 +275,10 @@ class _MorselStream:
 
     def attach_project(self, rec: QueryRecord, cpj, builds, lits,
                        fp: Optional[str],
-                       dep_versions: Optional[Dict[str, int]] = None
-                       ) -> _ProjectMember:
+                       dep_versions: Optional[Dict[str, int]] = None,
+                       phys=None) -> _ProjectMember:
         m = _ProjectMember(rec, cpj, builds, lits, self.spec.n_morsels,
-                           fp, dep_versions)
+                           fp, dep_versions, phys)
         self.proj_members.append(m)
         return m
 
@@ -215,6 +288,19 @@ class _MorselStream:
                 and not self.proj_members:
             return {}
         ex = self.server.executor
+        # the serving stream's ledger feed: fence this advance and record
+        # one measured slice against 1/n_morsels of each pinned plan's
+        # prediction.  Timing only when telemetry is on — the disabled
+        # path must keep its <2% overhead bound (no sync, no clock)
+        ledger_on = ex.tel.enabled
+        pipes = [g for g in self.groups.values() if g.members] \
+            + list(self.proj_members)
+        # warmup gate: an advance whose pipelines include a first-step
+        # (still-compiling) member would record jit time as bandwidth —
+        # poisoned evidence that makes the recalibration loop oscillate
+        warm = all(p.n_advances > 0 for p in pipes)
+        live_phys = [p.phys for p in pipes]
+        t0 = time.perf_counter() if ledger_on else 0.0
         union = tuple(sorted(
             {c for g in self.groups.values() if g.members
              for c in g.cp.stream_cols}
@@ -254,6 +340,22 @@ class _MorselStream:
             else:
                 self._complete_project(m, done)
         self.proj_members = still
+        for p in pipes:
+            p.n_advances += 1
+        if ledger_on and warm and live_phys:
+            for g in self.groups.values():
+                if g.carry is not None:
+                    jax.block_until_ready(g.carry)
+            dt = time.perf_counter() - t0
+            moved = int(sum(a.nbytes for a in arrays))
+            # one fenced measurement for the whole advance, split evenly
+            # across the co-scheduled pipelines (they shared the morsel
+            # transfer); each records against ITS pinned plan
+            share = 1.0 / len(live_phys)
+            for phys in live_phys:
+                ex.tel.ledger.record_plan(
+                    phys, dt * share, moved * share, mode="serve",
+                    scale=1.0 / self.spec.n_morsels)
         self.pos = (self.pos + 1) % self.spec.n_morsels
         return done
 
@@ -303,7 +405,9 @@ class QueryServer:
 
     def __init__(self, executor: Executor, *, streaming: bool = False,
                  morsel_rows: Optional[int] = None,
-                 semantic_cache=None):
+                 semantic_cache=None,
+                 policy: Optional[AdaptivePolicy] = None,
+                 backpressure_window: int = 64):
         self.executor = executor
         # an EXTERNAL SemanticCache shared across several executors (and
         # their servers) over one catalog: installed on this server's
@@ -334,6 +438,17 @@ class QueryServer:
         self._total_drain_s = 0.0
         self._streams: Dict[str, _MorselStream] = {}
         self._vsteps: Dict[tuple, object] = {}
+        # -- adaptive re-costing + QoS state --------------------------------- #
+        self.policy = policy
+        self.tenants: Dict[str, TenantSpec] = {
+            "default": TenantSpec("default")}
+        self.backpressure_window = int(backpressure_window)
+        self._recent: List[float] = []   # sojourns, backpressure window
+        self._ledger_pos = 0             # window_drift cursor
+        self._overlay_start = 0          # first row measured vs current model
+        self._breach_streak = 0
+        self.n_recalibrations = 0
+        self.n_backpressured = 0
 
     def _complete_rec(self, rec: QueryRecord,
                       path: Optional[str] = None) -> None:
@@ -346,6 +461,9 @@ class QueryServer:
         if path is not None:
             rec.path = path
         self.executor.metrics.observe("serve.sojourn_s", rec.latency_s)
+        self._recent.append(rec.latency_s)
+        if len(self._recent) > self.backpressure_window:
+            del self._recent[:-self.backpressure_window]
 
     def _vstep(self, cp, size: int):
         """Vmapped per-morsel step for a group of ``size`` compatible
@@ -361,13 +479,28 @@ class QueryServer:
 
     # -- client surface ----------------------------------------------------- #
 
-    def submit(self, q) -> int:
+    def register_tenant(self, spec: TenantSpec) -> None:
+        """Install (or replace) a tenant's QoS contract and push the
+        updated ``cache_share`` weights into the shared semantic cache's
+        per-tenant byte caps."""
+        self.tenants[spec.name] = spec
+        if self.executor.cache is not None:
+            self.executor.cache.set_tenant_shares(
+                {t.name: t.cache_share for t in self.tenants.values()})
+
+    def submit(self, q, *, tenant: str = "default",
+               deadline_s: Optional[float] = None) -> int:
         node = q.node if isinstance(q, L.Q) else q
+        spec = self.tenants.get(tenant) or TenantSpec(tenant)
+        now = time.perf_counter()
+        deadline = now + deadline_s if deadline_s is not None \
+            else float("inf")
         with self._lock:
             qid = self._next_qid
             self._next_qid += 1
-            self._pending.append(QueryRecord(qid, node,
-                                             t_submit=time.perf_counter()))
+            self._pending.append(QueryRecord(
+                qid, node, t_submit=now, tenant=tenant,
+                priority=spec.priority, deadline=deadline))
             self.n_submitted += 1
             depth = len(self._pending)
         self.executor.metrics.set("serve.queue_depth", depth)
@@ -392,8 +525,118 @@ class QueryServer:
         self._restart_stale_members()
         with self._lock:
             batch, self._pending = self._pending, []
+        batch = self._admission_order(batch)
+        batch = self._apply_backpressure(batch)
         with self.executor.tel.span("serve.pump", admitted=len(batch)):
-            return self._pump_batch(batch)
+            done = self._pump_batch(batch)
+        self._maybe_recalibrate()
+        return done
+
+    @staticmethod
+    def _admission_order(batch: List[QueryRecord]) -> List[QueryRecord]:
+        """QoS ordering: priority first (descending), earliest deadline
+        next, then submission order — a stable sort, so same-tenant
+        FIFO is preserved."""
+        return sorted(batch,
+                      key=lambda r: (-r.priority, r.deadline, r.t_submit))
+
+    def _recent_p95(self) -> Optional[float]:
+        if not self._recent:
+            return None
+        lat = sorted(self._recent)
+        return lat[int(0.95 * (len(lat) - 1))]
+
+    def _slo_target(self) -> Optional[float]:
+        """The strictest registered SLO — the tail backpressure defends."""
+        slos = [t.slo_p95_s for t in self.tenants.values()
+                if t.slo_p95_s is not None]
+        return min(slos) if slos else None
+
+    def _apply_backpressure(self, batch: List[QueryRecord]
+                            ) -> List[QueryRecord]:
+        """Streaming-pump load shedding: while the recent sojourn p95
+        breaches the strictest registered SLO, defer every admission
+        whose priority is strictly below the highest priority PRESENT in
+        this batch (so the top class always admits — no livelock), up to
+        a per-record starvation bound.  Deferred records go back to the
+        front of the queue; their sojourn clock keeps running, so
+        deferral is never latency-laundering."""
+        slo = self._slo_target()
+        if not batch or slo is None:
+            return batch
+        p95 = self._recent_p95()
+        if p95 is None or p95 <= slo:
+            return batch
+        top = max(r.priority for r in batch)
+        keep, defer = [], []
+        for r in batch:
+            if r.priority >= top or r.n_deferred >= 8:
+                keep.append(r)
+            else:
+                r.n_deferred += 1
+                defer.append(r)
+        if defer:
+            self.n_backpressured += len(defer)
+            self.executor.metrics.inc("serve.backpressured", len(defer))
+            with self._lock:
+                self._pending = defer + self._pending
+        return keep
+
+    def _maybe_recalibrate(self) -> None:
+        """The drift trigger: one windowed ledger read per pump/drain;
+        ``k_windows`` consecutive breaches fold the measured overlay into
+        the cost model through ``Executor.recost()`` (epoch bump), then
+        restart the evidence window so old-model rows never feed the
+        next overlay."""
+        pol = self.policy
+        ex = self.executor
+        if pol is None or not ex.tel.enabled:
+            return
+        agg, nxt = ex.tel.ledger.window_drift(
+            self._ledger_pos, min_rows=pol.min_window_rows)
+        if agg is None:
+            return
+        self._ledger_pos = nxt
+        worst = max((abs(a["drift_time"] - 1.0) for a in agg.values()
+                     if a["predicted_s"] > 0), default=0.0)
+        if worst <= pol.drift_threshold:
+            self._breach_streak = 0
+            return
+        self._breach_streak += 1
+        if self._breach_streak < pol.k_windows:
+            return
+        overlay = ex.tel.ledger.calibration_overlay(
+            ex.cost_model, start=self._overlay_start)
+        if overlay.get("backends") and \
+                not self._overlay_is_noop(overlay):
+            ex.recost(overlay)
+            self.n_recalibrations += 1
+            ex.metrics.inc("serve.recalibrations")
+            ex.tel.instant("serve.recalibrate", worst_drift=worst,
+                           epoch=ex.cost_epoch)
+            # the evidence window restarts only on an actual recost:
+            # rows measured against the old model never feed the next
+            # overlay
+            self._overlay_start = self._ledger_pos
+        self._breach_streak = 0
+
+    def _overlay_is_noop(self, overlay: dict) -> bool:
+        """Whether applying ``overlay`` would leave the cost model's
+        prices essentially unchanged (every mentioned backend's
+        efficiency within 20% of the live value).  Re-costing on a no-op
+        overlay would churn the epoch — recompiling every plan — without
+        changing a single decision; persistent residual drift the model
+        cannot express (e.g. overhead mispricing) must not re-trigger
+        forever."""
+        eff = self.executor.cost_model.stream_eff
+        for impl, meas in overlay.get("backends", {}).items():
+            cur = eff.get(impl)
+            new = meas.get("stream_eff")
+            if cur is None or not new:
+                continue
+            if abs(new - cur) / max(cur, 1e-12) > 0.2:
+                return False
+        return True
 
     def _pump_batch(self, batch: List[QueryRecord]) -> Dict[int, object]:
         t0 = time.perf_counter()
@@ -498,7 +741,7 @@ class QueryServer:
             cp, builds, _ = ex.stream_pipeline(node, phys, splan,
                                                stream.spec)
             lits = jnp.asarray(L.literals(node), jnp.int32)
-            stream.attach(rec, cp, builds, lits, fp, deps)
+            stream.attach(rec, cp, builds, lits, fp, deps, phys=phys)
             return True
         pplan = pl.analyze_project(node, ex.catalog.stats)
         if pplan is None:
@@ -507,7 +750,7 @@ class QueryServer:
         stream = self._stream_for(table, phys, len(pplan.stream_cols))
         cpj, builds = ex.project_pipeline(node, phys, pplan, stream.spec)
         lits = jnp.asarray(L.literals(node), jnp.int32)
-        stream.attach_project(rec, cpj, builds, lits, fp, deps)
+        stream.attach_project(rec, cpj, builds, lits, fp, deps, phys=phys)
         return True
 
     def _restart_stale_members(self) -> None:
@@ -546,13 +789,21 @@ class QueryServer:
                 self._pending = requeue + self._pending
 
     def _stream_for(self, table: str, phys, n_cols: int) -> _MorselStream:
+        ex = self.executor
         stream = self._streams.get(table)
+        if stream is not None and stream.epoch != ex.cost_epoch and \
+                not any(True for _ in stream.members()):
+            # the stream's morsel spec was priced under a previous cost
+            # epoch; with nothing in flight it can be re-specced to the
+            # re-costed morsel size.  A stream with live members keeps
+            # its spec — their remaining-circle counts are pinned to it
+            stream = None
         if stream is None:
-            ex = self.executor
             spec = ex.morsel_spec(table, self.morsel_rows
                                   or (phys.morsel_rows if phys else None),
                                   n_cols=n_cols)
             stream = self._streams[table] = _MorselStream(self, table, spec)
+            stream.epoch = ex.cost_epoch
         return stream
 
     def _inflight(self) -> bool:
@@ -584,6 +835,9 @@ class QueryServer:
 
     def _drain_batch(self, batch: List[QueryRecord]) -> Dict[int, object]:
         t0 = time.perf_counter()
+        # QoS ordering only: drain() must complete the whole batch, so
+        # backpressure (deferral) is a streaming-pump discipline
+        batch = self._admission_order(batch)
         self.executor.metrics.observe("serve.batch_size", len(batch))
         self._hint_shared(batch)
 
@@ -631,6 +885,7 @@ class QueryServer:
 
         self._total_drain_s += time.perf_counter() - t0
         self.history.extend(batch)
+        self._maybe_recalibrate()
         return {rec.qid: rec.result for rec in batch}
 
     def _run_microbatch(self, key: tuple, recs: List[QueryRecord]):
@@ -697,6 +952,23 @@ class QueryServer:
             "latency_p50_s": lat[int(0.50 * (n - 1))] if n else 0.0,
             "latency_p95_s": lat[int(0.95 * (n - 1))] if n else 0.0,
             "latency_max_s": lat[-1] if lat else 0.0,
+            "n_recalibrations": self.n_recalibrations,
+            "n_backpressured": self.n_backpressured,
         }
+        by_tenant: Dict[str, dict] = {}
+        for rec in self.history:
+            by_tenant.setdefault(rec.tenant, []).append(rec.latency_s)
+        out["tenants"] = {}
+        for t, ls in by_tenant.items():
+            ls.sort()
+            k = len(ls)
+            spec = self.tenants.get(t)
+            out["tenants"][t] = {
+                "n": k,
+                "latency_mean_s": sum(ls) / k,
+                "latency_p95_s": ls[int(0.95 * (k - 1))],
+                "priority": spec.priority if spec else 0,
+                "slo_p95_s": spec.slo_p95_s if spec else None,
+            }
         out.update(self.executor.stats_dict())
         return out

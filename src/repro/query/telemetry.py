@@ -316,12 +316,15 @@ class BandwidthLedger:
             self.rows.append(row)
 
     def record_plan(self, phys, measured_s: float, measured_bytes: float,
-                    *, mode: str) -> None:
+                    *, mode: str, scale: float = 1.0) -> None:
         """Attribute one fused/streamed pipeline's fenced measurement
         across its physical operators, proportional to each op's share
         of the predicted cost (bytes pro-rated the same way).  Every
         costed operator gets a row, so drift is populated plan-wide even
-        when only the pipeline boundary is fenceable."""
+        when only the pipeline boundary is fenceable.  ``scale`` shrinks
+        the plan's predictions to the measured slice — the serving
+        streams fence ONE morsel at a time, so they record against
+        ``1/n_morsels`` of the whole-plan prediction."""
         if not self.enabled or phys is None:
             return
         nodes = list(_walk(phys))
@@ -330,7 +333,8 @@ class BandwidthLedger:
         for p in nodes:
             self.record(
                 op=p.op, impl=p.impl, placement=p.placement,
-                predicted_bytes=p.n_bytes, predicted_s=p.cost_s,
+                predicted_bytes=p.n_bytes * scale,
+                predicted_s=p.cost_s * scale,
                 measured_bytes=measured_bytes * (p.n_bytes / total_b),
                 measured_s=measured_s * (p.cost_s / total_s),
                 mode=mode, attributed=True)
@@ -370,35 +374,89 @@ class BandwidthLedger:
         rows.sort(key=lambda a: abs(a["drift_time"] - 1.0), reverse=True)
         return rows[:n]
 
-    def calibration_overlay(self, model) -> dict:
-        """Measured drift folded back into the calibration-file shape
-        ``CostModel._apply_calibration`` consumes: per-impl stream
-        efficiencies scaled by the observed time drift (a pipeline that
-        ran 2x slower than priced implies half the assumed efficiency).
-        Only non-attributed or whole-pipeline evidence exists per impl,
-        so the overlay aggregates everything recorded under that impl.
-        This is the one-liner that makes recalibration online:
-        ``model._apply_calibration(ledger.calibration_overlay(model))``.
-        """
-        by_impl: Dict[str, dict] = {}
-        for r in self._snapshot():
-            a = by_impl.setdefault(r.impl, {"predicted_s": 0.0,
-                                            "measured_s": 0.0,
-                                            "measured_bytes": 0.0})
+    def window_drift(self, start: int, *, min_rows: int = 1
+                     ) -> Tuple[Optional[Dict[str, dict]], int]:
+        """Per-impl drift aggregated over ``rows[start:]`` — the serving
+        layer's WINDOWED view.  Returns ``(agg, next_start)``: the caller
+        keeps ``next_start`` as its cursor, so each call sees only rows
+        recorded since the last one, and "K consecutive windows over
+        threshold" is K consecutive calls whose worst impl drift
+        breaches.  When fewer than ``min_rows`` new rows exist the window
+        is not ready: returns ``(None, start)`` with the cursor
+        unmoved."""
+        with self._lock:
+            rows = self.rows[start:]
+            nxt = len(self.rows)
+        if len(rows) < min_rows:
+            return None, start
+        agg: Dict[str, dict] = {}
+        for r in rows:
+            a = agg.setdefault(r.impl, {
+                "n": 0, "predicted_s": 0.0, "measured_s": 0.0,
+                "predicted_bytes": 0.0, "measured_bytes": 0.0})
+            a["n"] += 1
             a["predicted_s"] += r.predicted_s
             a["measured_s"] += r.measured_s
+            a["predicted_bytes"] += r.predicted_bytes
             a["measured_bytes"] += r.measured_bytes
+        for a in agg.values():
+            a["drift_time"] = a["measured_s"] / a["predicted_s"] \
+                if a["predicted_s"] else 0.0
+            a["drift_bytes"] = a["measured_bytes"] / a["predicted_bytes"] \
+                if a["predicted_bytes"] else 0.0
+        return agg, nxt
+
+    def calibration_overlay(self, model, *, start: int = 0) -> dict:
+        """Measured achieved bandwidth folded back into the
+        calibration-file shape ``CostModel._apply_calibration`` consumes.
+
+        Per-impl stream efficiency is derived from MEASUREMENTS ONLY:
+        ``sum(measured_bytes) / sum(raw_bandwidth(placement) *
+        measured_s)`` — the achieved fraction of the bandwidth model's
+        raw curve.  Anchoring on the raw curve (not on the model's
+        current ``stream_eff``) is what makes the online loop stable:
+        regenerating the overlay from the same rows after applying it
+        yields the SAME overlay, instead of dividing an already-overlaid
+        efficiency by a stale drift ratio and compounding toward zero.
+        ``start`` restricts the evidence to ``rows[start:]`` so a
+        recalibrated server can exclude rows measured against a previous
+        model.  This is the one-liner that makes recalibration online:
+        ``model.apply_calibration(ledger.calibration_overlay(model))``.
+        """
+        by_impl: Dict[str, dict] = {}
+        with self._lock:
+            rows = self.rows[start:]
+        for r in rows:
+            if r.measured_s <= 0 or r.measured_bytes <= 0:
+                continue
+            a = by_impl.setdefault(r.impl, {"bw_seconds": 0.0,
+                                            "measured_s": 0.0,
+                                            "measured_bytes": 0.0})
+            a["bw_seconds"] += model.bandwidth_gbps(r.placement) * 1e9 \
+                * r.measured_s
+            a["measured_s"] += r.measured_s
+            a["measured_bytes"] += r.measured_bytes
+        # call overhead is NOT measured by the ledger, so the overlay
+        # reports the model's PRISTINE constant (not the live value): a
+        # previously mis-calibrated overhead must re-baseline on the next
+        # application, never be frozen in place by the overlay echoing it
+        base_over = getattr(model, "_baseline",
+                            {"call_overhead": model.call_overhead}
+                            )["call_overhead"]
         backends = {}
         for impl, a in by_impl.items():
-            if a["measured_s"] <= 0 or a["predicted_s"] <= 0:
+            if a["bw_seconds"] <= 0:
                 continue
-            drift = a["measured_s"] / a["predicted_s"]
-            eff = model.stream_eff.get(impl, 0.7) / drift
+            eff = a["measured_bytes"] / a["bw_seconds"]
             backends[impl] = {
                 "achieved_gbps": round(a["measured_bytes"]
-                                       / a["measured_s"] / 1e9, 2),
-                "stream_eff": round(min(max(eff, 1e-4), 1.0), 4),
-                "call_overhead_s": model.call_overhead.get(impl, 2e-6),
+                                       / a["measured_s"] / 1e9, 4),
+                # floor well below any honest efficiency (CPU-emulated
+                # streams achieve ~1e-5 of the modeled HBM curve): a
+                # floor ABOVE the truth would leave residual drift that
+                # re-triggers recalibration forever
+                "stream_eff": round(min(max(eff, 1e-6), 1.0), 6),
+                "call_overhead_s": base_over.get(impl, 2e-6),
             }
         return {"backend": "ledger", "backends": backends}
 
