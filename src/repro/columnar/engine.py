@@ -41,8 +41,25 @@ def scan(table: Table, columns: Sequence[str]) -> Table:
 
 def select_range(table: Table, column: str, lo: int, hi: int, *,
                  impl: str = "xla", block: int = 1024) -> Table:
-    """Range selection -> materialized index column (with count)."""
+    """Range selection -> materialized index column (with count).
+    ``block`` halves itself until the per-engine shard tiles evenly, so
+    the same call works on a 1-engine and an 8-engine mesh."""
     assert table.plan is not None, "place() the table first"
+    n_eng = table.plan.n_engines
+    if table.plan.placement != "partitioned" or \
+            table.num_rows % n_eng != 0:
+        # non-partitioned plans on a multi-device mesh must NOT go
+        # through select_distributed: its congested mode is the Fig. 5
+        # crossbar baseline (every engine rescans the first shard with
+        # per-engine offsets), a throughput analogue — not a correct
+        # selection unless n_engines == 1
+        col = table.column(column)
+        mask = (col >= lo) & (col <= hi)
+        n = int(jnp.sum(mask))
+        idx = compact_positions(mask, n).astype(jnp.int32)
+        return Table(f"{table.name}.sel", {"idx": Column(idx, "idx")})
+    while block > 1 and table.num_rows % (n_eng * block) != 0:
+        block //= 2
     idx, counts = sel_core.select_distributed(
         table.column(column), lo, hi, table.plan, block=block, impl=impl)
     flat = idx.reshape(-1)
@@ -69,8 +86,9 @@ def join(left: Table, right: Table, on: str, *, impl: str = "xla",
             f"rescan the probe side {passes}x (Fig. 8b linear regime)",
             RuntimeWarning, stacklevel=2)
     if unique:
+        l_keys = _pad_probe(left.column(on), left.plan.n_engines)
         s_idx, total = join_core.join_distributed(
-            right.column(on), left.column(on), left.plan, impl=impl)
+            right.column(on), l_keys, left.plan, impl=impl)
         n = int(total)
         l_idx = compact_positions(s_idx >= 0, n)
         r_idx = s_idx[l_idx]
@@ -81,12 +99,19 @@ def join(left: Table, right: Table, on: str, *, impl: str = "xla",
                           "r_idx": Column(r_idx, "r_idx")})
 
 
-def _join_pairs(s_keys: jax.Array, l_keys: jax.Array, plan, *,
-                impl: str = "xla"):
-    """Compacted (l_idx, s_idx) pair columns from the distributed multi-
-    match join.  The per-shard pair totals are exact even when a shard's
-    fixed pair list overflows, so one retry with the measured capacity
-    always suffices."""
+def _pad_probe(l_keys: jax.Array, n_engines: int) -> jax.Array:
+    """Pad the probe side to a multiple of the plan's engine count — the
+    distributed kernels shard_map it over the mesh axis, which needs even
+    shards.  -1 sentinels match nothing: real build keys are validated
+    non-negative and the multi-pass build pads are <= -(2**30)."""
+    rem = (-int(l_keys.shape[0])) % max(int(n_engines), 1)
+    if rem:
+        l_keys = jnp.concatenate(
+            [l_keys, jnp.full((rem,), -1, l_keys.dtype)])
+    return l_keys
+
+
+def _check_key_domain(s_keys: jax.Array, l_keys: jax.Array) -> None:
     # the kernels reserve key values for pad sentinels (negative range for
     # multi-pass padding, 2**31-1 for the Pallas table pad); this is the
     # eager layer, so reject out-of-domain catalog data instead of
@@ -97,6 +122,16 @@ def _join_pairs(s_keys: jax.Array, l_keys: jax.Array, plan, *,
             raise ValueError(
                 f"join {name} keys must be in [0, 2**31 - 2]: values "
                 "outside it collide with the kernel pad sentinels")
+
+
+def _join_pairs(s_keys: jax.Array, l_keys: jax.Array, plan, *,
+                impl: str = "xla"):
+    """Compacted (l_idx, s_idx) pair columns from the distributed multi-
+    match join.  The per-shard pair totals are exact even when a shard's
+    fixed pair list overflows, so one retry with the measured capacity
+    always suffices."""
+    _check_key_domain(s_keys, l_keys)
+    l_keys = _pad_probe(l_keys, plan.n_engines)
     out = join_core.join_distributed_multi(s_keys, l_keys, plan, impl=impl)
     l_buf, s_buf, totals, overflow = out
     if bool(jnp.any(overflow)):
@@ -108,6 +143,43 @@ def _join_pairs(s_keys: jax.Array, l_keys: jax.Array, plan, *,
     n = int(jnp.sum(totals))
     pos = compact_positions(l_buf >= 0, n)
     return l_buf[pos], s_buf[pos]
+
+
+def join_shuffle(left: Table, right: Table, on: str, layout, *,
+                 impl: str = "xla") -> Table:
+    """Inner join by shuffle repartitioning (the planner's costed
+    alternative to broadcasting the build side): both sides hash-partition
+    by key across ``layout``'s device mesh, each shard joins its bucket
+    locally.  Produces pairs bit-identical to ``join``: the raw emission
+    is shard-major, but a final stable sort by probe row restores the
+    single-device (probe row, bucket position) order — all matches of one
+    probe row live on one shard (same key, same hash), and the stable
+    partition + stable build sort keep equal-key matches in ascending
+    global build order, exactly like the unsharded kernel.  Shuffle-bucket
+    or pair-list overflows retry with the exact measured capacities, so
+    the result is always complete."""
+    s_keys, l_keys = right.column(on), left.column(on)
+    _check_key_domain(s_keys, l_keys)
+    kw = {}
+    for _ in range(3):
+        l_buf, s_buf, totals, pair_over, (s_counts, l_counts, shuf_over) = \
+            join_core.join_shuffle_multi(s_keys, l_keys, layout, impl=impl,
+                                         **kw)
+        if not (bool(shuf_over) or bool(jnp.any(pair_over))):
+            break
+        # counts/totals are exact even on overflow: one sizing pass each
+        # for the shuffle buckets and the pair lists always converges
+        l_cap = max(int(jnp.max(l_counts)), 8)
+        kw = dict(s_cap=max(int(jnp.max(s_counts)), 8), l_cap=l_cap,
+                  max_out_per_shard=max(int(jnp.max(totals)), 2 * l_cap, 64))
+    else:
+        raise AssertionError("join_shuffle failed to converge on capacity")
+    n = int(jnp.sum(totals))
+    pos = compact_positions(l_buf >= 0, n)
+    l_sel, s_sel = l_buf[pos], s_buf[pos]
+    order = jnp.argsort(l_sel, stable=True)
+    return Table("join", {"l_idx": Column(l_sel[order], "l_idx"),
+                          "r_idx": Column(s_sel[order], "r_idx")})
 
 
 def gather(table: Table, idx: jax.Array, columns: Sequence[str],

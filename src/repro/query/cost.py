@@ -97,19 +97,44 @@ def selectivity(stats: ColumnStats, lo: int, hi: int) -> float:
     return min(max(span, 0) / stats.domain, 1.0)
 
 
-def estimate_rows(node: L.Node, stats: Dict[str, TableStats]) -> float:
+# measured/predicted selectivity correction factors are clamped so a
+# single bad ledger window can never swing a plan by more than 4x in
+# either direction (satellite of the adaptive-replan loop)
+SEL_CORRECTION_CLAMP = (0.25, 4.0)
+
+
+def clamp_correction(factor: float) -> float:
+    lo, hi = SEL_CORRECTION_CLAMP
+    return min(max(float(factor), lo), hi)
+
+
+def estimate_rows(node: L.Node, stats: Dict[str, TableStats],
+                  corrections: Optional[Dict[Tuple[str, str], float]] = None
+                  ) -> float:
     """Cardinality estimate — drives build/probe side selection and the
-    multi-pass join block count."""
+    multi-pass join block count.
+
+    ``corrections`` maps (table, column) to a measured-over-predicted
+    bytes ratio from the bandwidth ledger (``Executor.recost`` folds them
+    in from ``BandwidthLedger.selectivity_corrections``): the uniform-
+    domain selectivity of a filter over that column is scaled by the
+    clamped factor, closing the PR-7 loop from observed drift back into
+    cardinality estimates — not just bandwidth constants."""
     if isinstance(node, L.Scan):
         return float(stats[node.table].num_rows)
     if isinstance(node, (L.Filter, L.FilterProject)):
-        base = estimate_rows(node.child, stats)
+        base = estimate_rows(node.child, stats, corrections)
         cs = _column_stats(node.child, node.column, stats)
         sel = selectivity(cs, node.lo, node.hi) if cs else 0.33
+        if corrections:
+            scan = probe_base_scan(node.child)
+            f = corrections.get((scan.table, node.column)) if scan else None
+            if f is not None:
+                sel = min(sel * clamp_correction(f), 1.0)
         return base * sel
     if isinstance(node, L.Join):
-        l = estimate_rows(node.left, stats)
-        r = estimate_rows(node.right, stats)
+        l = estimate_rows(node.left, stats, corrections)
+        r = estimate_rows(node.right, stats, corrections)
         cs = _column_stats(node.right, node.on, stats)
         ls = _column_stats(node.left, node.on, stats)
         # expected matches per probe row ~ |build| / |key domain|: exceeds
@@ -125,7 +150,7 @@ def estimate_rows(node: L.Node, stats: Dict[str, TableStats]) -> float:
             frac = 1.0
         return l * matches * frac
     if isinstance(node, L.Project):
-        return estimate_rows(node.child, stats)
+        return estimate_rows(node.child, stats, corrections)
     if isinstance(node, (L.Aggregate, L.TrainGLM)):
         return 1.0
     raise TypeError(node)
@@ -188,10 +213,17 @@ class CostModel:
     decision procedure on either bandwidth curve.
     """
 
-    def __init__(self, n_engines: int, *, hardware: str = "tpu",
+    def __init__(self, n_engines: int, *, n_shards: int = 1,
+                 hardware: str = "tpu",
                  allow_pallas: Optional[bool] = None,
                  calibration: Optional[dict] = None):
         self.n_engines = n_engines
+        # explicit shard_map striping width (device = pseudo-channel);
+        # 1 = the classic single-pipeline plans, byte-for-byte unchanged
+        self.n_shards = max(int(n_shards), 1)
+        # (table, column) -> measured/predicted bytes ratio fed back from
+        # the bandwidth ledger by Executor.recost (clamped at use)
+        self.sel_corrections: Dict[Tuple[str, str], float] = {}
         self.hardware = hardware
         if allow_pallas is None:
             # interpret-mode pallas on CPU is emulation, never a win
@@ -256,15 +288,42 @@ class CostModel:
     def bandwidth_gbps(self, placement: str) -> float:
         """Aggregate streaming bandwidth of one operator under a placement."""
         if self.hardware == "fpga":
+            if placement == "sharded":
+                # the paper's channel-count sweep (Figs. 5-7): aggregate
+                # bandwidth of n_shards separated pseudo-channels
+                return fpga_bandwidth_model(self.n_shards, 256)
             sep = {"partitioned": 256, "replicated": 256, "congested": 0}
             bw = fpga_bandwidth_model(32, sep[placement])
             # replicated = one engine's share of the separated layout
             return bw / 32 if placement == "replicated" else bw
+        if placement == "sharded":
+            # one device per shard streaming its own HBM, summed — the
+            # TPU analogue of the channel-count sweep
+            return tpu_bandwidth_model(self.n_shards, True)
         if placement == "partitioned":
             return tpu_bandwidth_model(self.n_engines, True)
         if placement == "congested":
             return tpu_bandwidth_model(self.n_engines, False)
         return TPU_HBM_GBPS            # replicated: one engine, local HBM
+
+    def shuffle_cost(self, n_bytes: float) -> float:
+        """Seconds to hash-repartition ``n_bytes`` across the shard mesh.
+
+        Under a uniform hash, (n_shards-1)/n_shards of every shard's rows
+        leave the device; those bytes cross the interconnect — a SEPARATE,
+        much narrower channel than local HBM (the cross-channel collapse
+        of the HLS/HBM studies).  This is the price the shuffle-vs-
+        broadcast join decision trades against rescan passes."""
+        if self.n_shards <= 1:
+            return 0.0
+        return n_bytes * (self.n_shards - 1) / self.n_shards / ICI_BW
+
+    def shard_broadcast_cost(self, n_bytes: float) -> float:
+        """Replicating a build side to every SHARD over the interconnect
+        (the broadcast strategy's repartition-analogue term)."""
+        if self.n_shards <= 1:
+            return 0.0
+        return n_bytes * (self.n_shards - 1) / ICI_BW
 
     def stream_cost(self, n_bytes: float, *, impl: str, placement: str,
                     n_passes: int = 1, flops: float = 0.0) -> float:
@@ -406,6 +465,8 @@ class PhysNode:
     children: Tuple["PhysNode", ...] = ()
     morsel_rows: Optional[int] = None     # streaming pipeline granularity
     n_bytes: float = 0.0                  # predicted bytes moved (priced)
+    shard_strategy: Optional[str] = None  # joins under sharding:
+                                          # "broadcast" | "shuffle"
 
     @property
     def total_cost_s(self) -> float:
@@ -413,10 +474,12 @@ class PhysNode:
 
     def describe(self) -> str:
         morsel = f" morsel={self.morsel_rows}" if self.morsel_rows else ""
+        strat = f" strategy={self.shard_strategy}" if self.shard_strategy \
+            else ""
         return (f"impl={self.impl} placement={self.placement} "
                 f"passes={self.n_passes} est_rows={self.est_rows_out:.0f} "
                 f"cost={self.cost_s * 1e6:.1f}us bw={self.gbps:.0f}GB/s"
-                f"{morsel}")
+                f"{morsel}{strat}")
 
 
 def _choose(model: CostModel, n_bytes: float, placements: Tuple[str, ...],
@@ -433,6 +496,15 @@ def _choose(model: CostModel, n_bytes: float, placements: Tuple[str, ...],
     return impl, pl, alts[best], alts
 
 
+def _stream_placements(model: CostModel) -> Tuple[str, ...]:
+    """Stream-role placement alternatives: an active shard layout replaces
+    the GSPMD 'partitioned' layout with the explicit shard_map striping
+    (mesh=1 plans stay byte-for-byte what they were)."""
+    if model.n_shards > 1:
+        return ("sharded", "congested")
+    return ("partitioned", "congested")
+
+
 def plan_physical(node: L.Node, stats: Dict[str, TableStats],
                   model: CostModel, *, role: str = "stream") -> PhysNode:
     """Annotate a (logically optimized) plan with per-operator impl,
@@ -442,7 +514,8 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
     join and a TrainGLM dataset are ``"build"`` (must be replicated, the
     paper's URAM/Fig. 10a replication); everything else streams.
     """
-    rows = estimate_rows(node, stats)
+    corr = model.sel_corrections or None
+    rows = estimate_rows(node, stats, corr)
 
     if isinstance(node, L.Scan):
         n_cols = len(L.output_columns(node, {t: s.columns
@@ -459,19 +532,19 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
                             cost, model.bandwidth_gbps("replicated"),
                             {"xla/replicated": cost}, n_bytes=n_bytes)
         impl, pl, cost, alts = _choose(model, n_bytes,
-                                       ("partitioned", "congested"))
+                                       _stream_placements(model))
         return PhysNode("scan", node, impl, pl, 1, rows, cost,
                         model.bandwidth_gbps(pl), alts, n_bytes=n_bytes)
 
     if isinstance(node, (L.Filter, L.FilterProject)):
         child = plan_physical(node.child, stats, model, role=role)
-        in_rows = estimate_rows(node.child, stats)
+        in_rows = estimate_rows(node.child, stats, corr)
         n_out_cols = len(node.columns) if isinstance(node, L.FilterProject) \
             else 1
         n_bytes = in_rows * BYTES_PER_VALUE + rows * BYTES_PER_VALUE \
             * n_out_cols
         placements = ("replicated",) if role == "build" \
-            else ("partitioned", "congested")
+            else _stream_placements(model)
         impl, pl, cost, alts = _choose(model, n_bytes, placements)
         op = "filter_project" if isinstance(node, L.FilterProject) \
             else "filter"
@@ -482,10 +555,12 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
     if isinstance(node, L.Join):
         left = plan_physical(node.left, stats, model, role="stream")
         right = plan_physical(node.right, stats, model, role="build")
-        build_rows = estimate_rows(node.right, stats)
-        probe_rows = estimate_rows(node.left, stats)
+        build_rows = estimate_rows(node.right, stats, corr)
+        probe_rows = estimate_rows(node.left, stats, corr)
         n_passes = max(-(-int(build_rows) // HT_CAPACITY), 1)
         unique = key_is_unique(node.right, node.on, stats)
+        chain = 1.0 if unique \
+            else expected_chain_length(node.right, node.on, stats)
         if unique:
             # open-addressing fast path: one egress line per probe row,
             # plus the one-time hash-table build over the build rows
@@ -501,7 +576,6 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
             # bucket build (an O(n log n) sort of the build rows) are paid
             # once, so their bytes are divided by n_passes before
             # stream_cost multiplies everything back up
-            chain = expected_chain_length(node.right, node.on, stats)
             out_pairs = rows
             sort_bytes = build_rows * BYTES_PER_VALUE * max(
                 math.log2(max(build_rows, 2.0)), 1.0)
@@ -514,26 +588,76 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
         # replicated by construction) — pricing an independent join
         # placement would optimize a decision execution never consults
         probe_pl = left.placement if left.placement != "replicated" \
-            else "partitioned"
+            else _stream_placements(model)[0]
         impl, pl, cost, alts = _choose(model, n_bytes, (probe_pl,),
                                        n_passes=n_passes)
+        shard_strategy = None
+        if model.n_shards > 1 and pl == "sharded":
+            # two ways to co-locate build and probe rows on a shard:
+            #   broadcast — replicate the build to every shard over the
+            #     interconnect; each shard probes against the FULL build
+            #     (ceil(build / HT_CAPACITY) probe rescans, n redundant
+            #     build sorts);
+            #   shuffle — hash-repartition BOTH sides; each shard builds
+            #     only its ~1/n slice, collapsing the rescan passes, at
+            #     the price of (n-1)/n of every byte crossing the
+            #     interconnect.
+            # The crossover is the paper's channel-pricing trade: rescan
+            # bytes at aggregate HBM bandwidth vs shuffle bytes on the
+            # narrow interconnect channel.
+            n = float(model.n_shards)
+            build_bytes = build_rows * BYTES_PER_VALUE
+            probe_bytes = probe_rows * BYTES_PER_VALUE
+            passes_sh = max(-(-int(max(build_rows / n, 1.0))
+                              // HT_CAPACITY), 1)
+
+            def _strategy_bytes(local_build, passes, n_copies):
+                # aggregate bytes in stream_cost's accounting: one-time
+                # build terms are divided by the pass count that
+                # multiplies them back up; ``n_copies`` = how many shards
+                # redo the build work (n under broadcast, aggregate 1x
+                # across shards under shuffle)
+                if unique:
+                    return (probe_bytes + n_copies * local_build
+                            * BYTES_PER_VALUE / passes)
+                sort_b = n_copies * local_build * BYTES_PER_VALUE * max(
+                    math.log2(max(local_build, 2.0)), 1.0)
+                return (probe_bytes * max(chain, 1.0)
+                        + (2 * rows * BYTES_PER_VALUE + sort_b) / passes)
+
+            alt_b = model.shard_broadcast_cost(build_bytes) \
+                + model.stream_cost(_strategy_bytes(build_rows, n_passes, n),
+                                    impl=impl, placement="sharded",
+                                    n_passes=n_passes)
+            alt_s = model.shuffle_cost(probe_bytes + build_bytes) \
+                + model.stream_cost(
+                    _strategy_bytes(build_rows / n, passes_sh, n),
+                    impl=impl, placement="sharded", n_passes=passes_sh)
+            alts["shard/broadcast"] = alt_b
+            alts["shard/shuffle"] = alt_s
+            if alt_s < alt_b:
+                shard_strategy, cost, n_passes = "shuffle", alt_s, passes_sh
+            else:
+                shard_strategy, cost = "broadcast", alt_b
         return PhysNode(op, node, impl, pl, n_passes, rows, cost,
                         model.bandwidth_gbps(pl), alts, (left, right),
-                        n_bytes=n_bytes)
+                        n_bytes=n_bytes, shard_strategy=shard_strategy)
 
     if isinstance(node, L.Project):
         child = plan_physical(node.child, stats, model, role=role)
         n_bytes = rows * BYTES_PER_VALUE * len(node.columns)
-        impl, pl, cost, alts = _choose(model, n_bytes, ("partitioned",))
+        impl, pl, cost, alts = _choose(model, n_bytes,
+                                       _stream_placements(model)[:1])
         return PhysNode("project", node, impl, pl, 1, rows, cost,
                         model.bandwidth_gbps(pl), alts, (child,),
                         n_bytes=n_bytes)
 
     if isinstance(node, L.Aggregate):
         child = plan_physical(node.child, stats, model, role=role)
-        in_rows = estimate_rows(node.child, stats)
+        in_rows = estimate_rows(node.child, stats, corr)
         n_bytes = in_rows * BYTES_PER_VALUE
-        impl, pl, cost, alts = _choose(model, n_bytes, ("partitioned",))
+        impl, pl, cost, alts = _choose(model, n_bytes,
+                                       _stream_placements(model)[:1])
         # streaming granularity for the whole pipeline this aggregate
         # roots: priced on the probe-spine base scan (the stream source)
         base = probe_base_scan(node.child)
@@ -541,8 +665,13 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
         if base is not None and base.table in stats:
             n_cols = len(base.columns) if base.columns is not None \
                 else len(stats[base.table].columns)
+            # one morsel must cut evenly both across the host engines and
+            # across the shard mesh
+            align = math.lcm(model.n_engines, model.n_shards) \
+                if model.n_shards > 1 else None
             morsel_rows = model.choose_morsel_rows(
-                stats[base.table].num_rows, max(n_cols, 1), impl=impl)
+                stats[base.table].num_rows, max(n_cols, 1), impl=impl,
+                align=align)
         return PhysNode("aggregate", node, impl, pl, 1, 1.0, cost,
                         model.bandwidth_gbps(pl), alts, (child,),
                         morsel_rows=morsel_rows, n_bytes=n_bytes)

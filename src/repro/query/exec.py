@@ -37,6 +37,7 @@ import numpy as np
 from repro.columnar import engine
 from repro.columnar.table import Column, MorselSpec, Table
 from repro.core.channels import ChannelPlan, plan as make_plan
+from repro.distributed.sharding import ShardLayout
 from repro.launch.mesh import make_host_mesh
 from repro.query import logical as L
 from repro.query import pipeline as pl
@@ -164,7 +165,8 @@ class Executor:
                  semantic_cache: Optional[SemanticCache] = None,
                  overlap_transfers: Optional[bool] = None,
                  telemetry: Optional[tm.Telemetry] = None,
-                 tenant: Optional[str] = None):
+                 tenant: Optional[str] = None,
+                 shards: Optional[int] = None):
         self.catalog = catalog
         # tenant label every semantic-cache admission carries: with
         # per-tenant byte-budget shares configured on a SHARED cache,
@@ -181,13 +183,33 @@ class Executor:
         self.tel = telemetry if telemetry is not None else tm.get()
         self.metrics = tm.MetricsRegistry()
         self.reset_metrics()
+        # sharded placement axis (device = pseudo-channel): shards=None
+        # keeps every plan, fingerprint and cache key byte-identical to
+        # the single-device executor this grew out of
+        n_sh = max(int(shards), 1) if shards else 1
+        self.shard_layout: Optional[ShardLayout] = \
+            ShardLayout(n_sh) if n_sh > 1 else None
+        if self.shard_layout is not None:
+            _ = self.shard_layout.mesh      # fail fast on missing devices
+            if mesh is None:
+                # ONE device set everywhere: the base mesh collapses onto
+                # the shard mesh's devices, so replicated builds and
+                # congested streams can feed the same jitted step as
+                # shard-placed morsels (jit rejects mixed device sets)
+                mesh = jax.sharding.Mesh(
+                    np.array(jax.devices()[:n_sh]).reshape(1, n_sh),
+                    ("data", "model"))
         self.mesh = mesh if mesh is not None else make_host_mesh()
         self.axis = axis
         n_eng = self.mesh.shape[axis]
         # default model picks up measured per-backend numbers when
         # benchmarks/run.py has emitted BENCH_calibration.json in the CWD
         self.cost_model = cost_model or CostModel(
-            n_eng, calibration=load_calibration())
+            n_eng, calibration=load_calibration(), n_shards=n_sh)
+        if self.shard_layout is not None \
+                and self.cost_model.n_shards != n_sh:
+            # a caller-supplied model prices what this executor runs
+            self.cost_model.n_shards = n_sh
         self.placement_capacity_bytes = placement_capacity_bytes
         # semantic result/subplan cache: opt-in (``cache_bytes`` budget,
         # or a shared SemanticCache instance) so differential baselines
@@ -205,6 +227,12 @@ class Executor:
         self.plans: Dict[str, ChannelPlan] = {
             p: make_plan(self.mesh, axis, p)
             for p in ("partitioned", "replicated", "congested")}
+        if self.shard_layout is not None:
+            # one engine per mesh device: the shard axis IS the paper's
+            # pseudo-channel axis, so the sharded plan partitions over it
+            self.plans["sharded"] = ChannelPlan(
+                self.shard_layout.mesh, self.shard_layout.axis,
+                "partitioned")
         self._compiled: Dict[tuple, object] = {}
         self._planned: Dict[L.Node, tuple] = {}
         self._fps: Dict[L.Node, str] = {}
@@ -291,6 +319,18 @@ class Executor:
         if drifted and self.cache is not None:
             self.cache.sync_versions(self.catalog.versions())
 
+    # -- shard layout --------------------------------------------------------- #
+
+    @property
+    def n_shards(self) -> int:
+        return self.shard_layout.n_shards if self.shard_layout else 1
+
+    def _layout_key(self) -> Optional[tuple]:
+        """Shard-layout element of every plan-derived key: None on a
+        1-device executor, so those keys stay byte-identical to the
+        pre-sharding executor's."""
+        return self.shard_layout.key() if self.shard_layout else None
+
     # -- online re-costing ---------------------------------------------------- #
 
     def recost(self, calibration: Optional[dict] = None) -> int:
@@ -313,6 +353,13 @@ class Executor:
             calibration = load_calibration()
         if calibration:
             self.cost_model.apply_calibration(calibration)
+        # cardinality feedback (the PR-7 leftover): per-(table, column)
+        # measured/predicted byte ratios from the ledger scale the
+        # selectivity estimates the NEXT plans are priced with — clamped
+        # at use so one anomalous window cannot swing estimates 10x
+        corrections = self.tel.ledger.selectivity_corrections()
+        if corrections:
+            self.cost_model.sel_corrections.update(corrections)
         self.cost_epoch += 1
         self._planned.clear()
         self._fps.clear()
@@ -330,7 +377,8 @@ class Executor:
         fp = self._fps.get(node)
         if fp is None:
             opt, _ = self.plan(node)
-            fp = L.fingerprint(opt, self.catalog.versions())
+            fp = L.fingerprint(opt, self.catalog.versions(),
+                               layout=self._layout_key())
             self._fps[node] = fp
         return fp
 
@@ -351,7 +399,14 @@ class Executor:
                     "it (mode='stream' places them one morsel at a time); "
                     "build/replicated columns and eagerly-lowered plans "
                     "need every placed column to fit one placement")
-            self._placed[key] = self.plans[placement].place(data)
+            plan = self.plans.get(placement)
+            if plan is None or (plan.placement == "partitioned"
+                                and data.shape[0] % plan.n_engines != 0):
+                # non-dividing rows cannot device_put under P(axis):
+                # replicate instead (shard_map re-shards on entry, so
+                # results are unchanged — only locality is lost)
+                plan = self.plans["replicated"]
+            self._placed[key] = plan.place(data)
         return self._placed[key]
 
     def _placed_table(self, node: L.Scan, placement: str) -> Table:
@@ -508,7 +563,8 @@ class Executor:
             moved = sum(a.nbytes for a in arrays) \
                 + sum(b.nbytes for b in builds)
             sp.set(measured_s=dt, measured_bytes=moved)
-            self.tel.ledger.record_plan(phys, dt, moved, mode="fused")
+            self.tel.ledger.record_plan(phys, dt, moved, mode="fused",
+                                        shards=self.n_shards)
             return cp.finalize(carry), hit
 
     def _route_to_refine(self, node: L.Node, splan: pl.StreamPlan) -> bool:
@@ -543,13 +599,17 @@ class Executor:
             (t, self.catalog.stats[t].num_rows)
             for t in {n.table for n in L.walk(node)
                       if isinstance(n, L.Scan)}))
-        decisions = tuple((p.op, p.impl, p.placement, p.n_passes)
-                          for p in _walk_phys(phys)) if phys else ()
+        decisions = tuple(
+            (p.op, p.impl, p.placement, p.n_passes, p.shard_strategy)
+            for p in _walk_phys(phys)) if phys else ()
         # cost_epoch: a recost() invalidates every compiled plan even
         # when the physical decisions happen to coincide — morsel-rows
-        # and pricing context are not part of ``decisions``
+        # and pricing context are not part of ``decisions``.  The shard
+        # layout joins the key so a 1-device and an 8-device plan can
+        # never alias one compiled executable
         return (L.signature(node), shapes, decisions,
-                self.cost_model.n_engines, self.cost_epoch)
+                self.cost_model.n_engines, self.cost_epoch,
+                self._layout_key())
 
     def _compile(self, node: L.Node, phys: Optional[PhysNode],
                  splan: pl.StreamPlan, *, rows: Optional[int]):
@@ -579,7 +639,8 @@ class Executor:
             self.metrics.inc("exec.trace_count")
 
         cp = pl.compile_pipeline(splan, rows, self._agg_dtype(splan),
-                                 impls=impls, trace_marker=bump)
+                                 impls=impls, trace_marker=bump,
+                                 shard=self.shard_layout)
         return cp, specs
 
     def _agg_dtype(self, splan: pl.StreamPlan):
@@ -678,7 +739,8 @@ class Executor:
             moved = self.catalog.stats[table].num_rows * 4 \
                 * len(cp.stream_cols) + sum(b.nbytes for b in builds)
             sp.set(measured_s=dt, measured_bytes=moved)
-            self.tel.ledger.record_plan(phys, dt, moved, mode="stream")
+            self.tel.ledger.record_plan(phys, dt, moved, mode="stream",
+                                        shards=self.n_shards)
             return cp.finalize(carry), hit
 
     def morsel_spec(self, table: str, target: Optional[int] = None,
@@ -739,7 +801,8 @@ class Executor:
                 self.metrics.inc("exec.trace_count")
 
             self._compiled[key] = pl.compile_project_pipeline(
-                pplan, spec.rows, impls=impls, trace_marker=bump)
+                pplan, spec.rows, impls=impls, trace_marker=bump,
+                shard=self.shard_layout)
         cpj = self._compiled[key]
         return cpj, self._breaker_arrays(pplan.breakers)
 
@@ -753,6 +816,11 @@ class Executor:
         share one placement per column slice."""
         start, stop = spec.bounds(i)
         sh = self.plans["partitioned"].sharding()
+        if self.shard_layout is not None \
+                and spec.rows % self.shard_layout.n_shards == 0:
+            # morsels feed shard_map pipelines: place each slice along
+            # the shard axis so the per-device step reads local bytes
+            sh = self.plans["sharded"].sharding()
         arrays = []
         # ONE cached granularity per table (first comer wins): other
         # sizes bypass the cache instead of pinning a full extra device
@@ -878,11 +946,30 @@ class Executor:
             if isinstance(n, L.Join):
                 lt = eval_cached(n.left)
                 rt = eval_cached(n.right)
-                if lt.plan is None:
-                    lt = lt.place(self.plans["partitioned"])
-                pairs = engine.join(
-                    lt, rt, n.on, impl=impl_of(n),
-                    unique=key_is_unique(n.right, n.on, self.catalog.stats))
+                d = decisions.get(n)
+                if d is not None and d.shard_strategy == "shuffle" \
+                        and self.shard_layout is not None:
+                    # the costed alternative to broadcasting the build:
+                    # hash-partition both sides across the device mesh
+                    # and join each bucket locally.  Pair order is
+                    # canonicalized, so the result is bit-identical to
+                    # the broadcast join
+                    pairs = engine.join_shuffle(lt, rt, n.on,
+                                                self.shard_layout,
+                                                impl=impl_of(n))
+                else:
+                    if lt.plan is None:
+                        # non-dividing intermediates cannot device_put
+                        # under P(axis) on a multi-device mesh; the
+                        # congested (replicated) placement always can
+                        pname = "partitioned" if lt.num_rows \
+                            % self.plans["partitioned"].n_engines == 0 \
+                            else "congested"
+                        lt = lt.place(self.plans[pname])
+                    pairs = engine.join(
+                        lt, rt, n.on, impl=impl_of(n),
+                        unique=key_is_unique(n.right, n.on,
+                                             self.catalog.stats))
                 cols = {}
                 for c in lt.columns:
                     cols[c] = Column(jnp.take(lt.column(c),
@@ -969,7 +1056,10 @@ class Executor:
                 return engine.gather(
                     t, idx, [c for c in keep if c in t.columns],
                     name=f"{t.name}.sel")
-        n_eng = self.mesh.shape[self.axis]
+        # the table's OWN plan decides the shard count (a sharded-placed
+        # table splits over the shard mesh, not the base mesh)
+        n_eng = t.plan.n_engines if t.plan is not None \
+            else self.mesh.shape[self.axis]
         if t.plan is not None and t.num_rows % (n_eng * block) == 0:
             sel = engine.select_range(t, column, lo, hi, impl=impl,
                                       block=block)
@@ -1054,6 +1144,7 @@ class Executor:
             "cached_morsels": len(self._morsels),
             "cost_model_calibrated_from": self.cost_model.calibrated_from,
             "cost_epoch": self.cost_epoch,
+            "n_shards": self.n_shards,
             "recost_count": int(self.metrics.value("exec.recost_count")),
             "result_cache_hits": self.result_hits,
             "subplan_cache_hits": self.subplan_hits,

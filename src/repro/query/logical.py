@@ -288,7 +288,8 @@ def tables_of(node: Node) -> Tuple[str, ...]:
 
 def fingerprint(node: Node,
                 versions: Optional[Mapping[str, int]] = None, *,
-                order_sensitive: Optional[bool] = None) -> str:
+                order_sensitive: Optional[bool] = None,
+                layout: Optional[tuple] = None) -> str:
     """Stable semantic hash of a plan against specific table versions.
 
     Equal fingerprints mean equal results: filter-chain permutations
@@ -296,13 +297,20 @@ def fingerprint(node: Node,
     (pass ``order_sensitive=True`` to force exact structure — the
     subplan-cache key for materialized intermediates, whose row order
     matters).  Any referenced table's version bump changes the hash, so
-    stale cache entries are unreachable rather than merely flagged."""
+    stale cache entries are unreachable rather than merely flagged.
+
+    ``layout`` is the executor's shard-layout key (``ShardLayout.key()``):
+    folded into the hash ONLY when given, so a 1-device executor (which
+    passes None) produces byte-for-byte the fingerprints it always did,
+    while an 8-device plan can never alias a 1-device plan's cache
+    entries."""
     if order_sensitive is None:
         order_sensitive = not isinstance(node, Aggregate)
     key = _canonical_key(canonicalize(node), not order_sensitive)
     deps = tuple((t, int(versions.get(t, 0)) if versions else 0)
                  for t in tables_of(node))
-    return hashlib.sha256(repr((key, deps)).encode()).hexdigest()[:20]
+    payload = (key, deps) if layout is None else (key, deps, layout)
+    return hashlib.sha256(repr(payload).encode()).hexdigest()[:20]
 
 
 # --------------------------------------------------------------------------- #

@@ -37,8 +37,11 @@ from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.columnar import engine
+from repro.distributed.sharding import ShardLayout
 from repro.kernels.join import ref as join_ref
 from repro.query import logical as L
 from repro.query.cost import TableStats, key_is_unique
@@ -198,6 +201,7 @@ class CompiledPipeline:
     raw_step: Callable
     init_carry: Callable[[], object]
     finalize: Callable[[object], object]
+    shard: Optional[ShardLayout] = None   # set when step is shard_mapped
 
     @property
     def n_build_arrays(self) -> int:
@@ -206,7 +210,8 @@ class CompiledPipeline:
 
 def compile_pipeline(splan: StreamPlan, rows: int, agg_dtype, *,
                      impls: Tuple[str, ...] = (),
-                     trace_marker: Optional[Callable] = None
+                     trace_marker: Optional[Callable] = None,
+                     shard: Optional[ShardLayout] = None
                      ) -> CompiledPipeline:
     """Lower a streamable plan into one jitted per-morsel step.
 
@@ -217,14 +222,28 @@ def compile_pipeline(splan: StreamPlan, rows: int, agg_dtype, *,
     (parallel to the breakers) carries the cost model's per-join impl
     decision: ``pallas`` probes use the binary-search counts kernel when
     the morsel shape admits it, everything else the XLA searchsorted.
+
+    With ``shard`` (and ``rows`` divisible by the shard count) the step
+    body is ``shard_map``-wrapped over the layout's mesh: every device
+    evaluates the spine on its contiguous 1/n slice of the morsel (its
+    pseudo-channel), builds stay replicated, and the carry reductions
+    become ``psum``s of per-shard partial sums.  Integer carries psum
+    exactly, and the mean's f32 partials over int inputs are exactly
+    representable, so sharded results stay BIT-IDENTICAL to the
+    single-device fold.
     """
     from repro.kernels.join.join import DEFAULT_BLOCK, probe_counts_pallas
+
+    sharded = shard is not None and shard.n_shards > 1 \
+        and rows % shard.n_shards == 0
+    n_loc = rows // shard.n_shards if sharded else rows
+    axis = shard.axis if sharded else None
 
     node = splan.node
     breakers = splan.breakers
     probe_impls = tuple(
         impls[i] if i < len(impls) and impls[i] == "pallas"
-        and rows % DEFAULT_BLOCK == 0 else "xla"
+        and n_loc % DEFAULT_BLOCK == 0 else "xla"
         for i in range(len(breakers)))
     agg_is_int = jnp.issubdtype(agg_dtype, jnp.integer)
     # carry dtypes: 64-bit accumulators when x64 is enabled; under the
@@ -253,12 +272,23 @@ def compile_pipeline(splan: StreamPlan, rows: int, agg_dtype, *,
 
     n_build = sum(b.n_arrays for b in breakers)
 
+    def _rsum(x, dtype):
+        # cast BEFORE the reduction (the per-morsel sum must run in the
+        # carry's accumulator dtype); under sharding the partial sums are
+        # psum'd across shards — exact for the integer/int-valued-f32
+        # carries, hence bit-identical to the single-device fold
+        s = jnp.sum(x.astype(dtype))
+        return jax.lax.psum(s, axis) if sharded else s
+
     def step(lits, carry, n_valid, *arrays):
         if trace_marker is not None:
             trace_marker()                  # python side effect: trace count
         build_flat = arrays[:n_build]
         morsel = arrays[n_build:]
-        valid = jnp.arange(rows, dtype=jnp.int32) < n_valid
+        # each shard sees its contiguous 1/n block: offset the validity
+        # window into GLOBAL row coordinates
+        off = jax.lax.axis_index(axis) * n_loc if sharded else 0
+        valid = off + jnp.arange(n_loc, dtype=jnp.int32) < n_valid
         lit_pos = [0]
         breaker_pos = [0]
 
@@ -284,7 +314,7 @@ def compile_pipeline(splan: StreamPlan, rows: int, agg_dtype, *,
             if isinstance(n, L.Scan):
                 cols = dict(zip(splan.stream_cols, morsel))
                 return (cols, valid,
-                        jnp.ones((rows,), jnp.int32), {})
+                        jnp.ones((n_loc,), jnp.int32), {})
             if isinstance(n, (L.Filter, L.FilterProject)):
                 cols, mask, weight, buckets = eval_node(n.child)
                 lo, hi = next_lit(), next_lit()
@@ -323,7 +353,7 @@ def compile_pipeline(splan: StreamPlan, rows: int, agg_dtype, *,
         cols, mask, weight, buckets = eval_node(node.child)
         w_live = jnp.where(mask, weight, 0)
         if node.op == "count":
-            return carry + jnp.sum(w_live.astype(carry.dtype))
+            return carry + _rsum(w_live, carry.dtype)
         if node.column in cols:
             val = cols[node.column]
             contrib = val * w_live.astype(val.dtype)
@@ -332,20 +362,30 @@ def compile_pipeline(splan: StreamPlan, rows: int, agg_dtype, *,
             others = w_live // jnp.maximum(cnt, 1)
             contrib = bsum * others.astype(bsum.dtype)
         if node.op == "sum":
-            # cast BEFORE the reduction: the per-morsel sum must run in
-            # the carry's (possibly 64-bit) accumulator dtype
-            return carry + jnp.sum(contrib.astype(carry.dtype))
+            return carry + _rsum(contrib, carry.dtype)
         # mean: exact partial sums in the accumulator dtype (int inputs
         # stay exactly representable, so the result is bit-identical to
         # the whole-column evaluation)
         s, c = carry
-        return (s + jnp.sum(contrib.astype(s.dtype)),
-                c + jnp.sum(w_live.astype(c.dtype)))
+        return (s + _rsum(contrib, s.dtype),
+                c + _rsum(w_live, c.dtype))
 
+    raw = step
+    if sharded:
+        # lits / carry / n_valid / builds replicated, morsel columns split
+        # into contiguous per-device blocks; the carry (psum'd inside) is
+        # replicated on the way out.  P() is a pytree prefix, so the
+        # mean's tuple carry is covered.
+        raw = shard_map(
+            step, mesh=shard.mesh,
+            in_specs=(P(), P(), P()) + (P(),) * n_build
+            + (P(axis),) * len(splan.stream_cols),
+            out_specs=P(), check_rep=False)
     donate = (1,) if jax.default_backend() != "cpu" else ()
     return CompiledPipeline(
         splan.base_scan.table, splan.stream_cols, breakers, rows,
-        jax.jit(step, donate_argnums=donate), step, init, fin)
+        jax.jit(raw, donate_argnums=donate), raw, init, fin,
+        shard=shard if sharded else None)
 
 
 @dataclasses.dataclass
@@ -363,6 +403,7 @@ class CompiledProject:
     out_cols: Tuple[str, ...]
     step: Callable
     raw_step: Callable
+    shard: Optional[ShardLayout] = None   # set when step is shard_mapped
 
     @property
     def n_build_arrays(self) -> int:
@@ -371,18 +412,29 @@ class CompiledProject:
 
 def compile_project_pipeline(pplan: ProjectStreamPlan, rows: int, *,
                              impls: Tuple[str, ...] = (),
-                             trace_marker: Optional[Callable] = None
+                             trace_marker: Optional[Callable] = None,
+                             shard: Optional[ShardLayout] = None
                              ) -> CompiledProject:
     """Lower a Project-rooted streamable plan into one jitted per-morsel
     step producing (mask, out_cols).  Same argument layout and literal
     discipline as ``compile_pipeline`` — range bounds stay traced, so the
-    serving streams share one compilation across member bounds."""
+    serving streams share one compilation across member bounds.
+
+    With ``shard``, each device evaluates its contiguous 1/n block and
+    the per-shard (mask, cols) blocks concatenate back into the global
+    morsel row order (out_specs=P(axis)), so the driver's compaction —
+    and therefore the output table — is unchanged byte for byte."""
     from repro.kernels.join.join import DEFAULT_BLOCK, probe_counts_pallas
+
+    sharded = shard is not None and shard.n_shards > 1 \
+        and rows % shard.n_shards == 0
+    n_loc = rows // shard.n_shards if sharded else rows
+    axis = shard.axis if sharded else None
 
     breakers = pplan.breakers
     probe_impls = tuple(
         impls[i] if i < len(impls) and impls[i] == "pallas"
-        and rows % DEFAULT_BLOCK == 0 else "xla"
+        and n_loc % DEFAULT_BLOCK == 0 else "xla"
         for i in range(len(breakers)))
     n_build = sum(b.n_arrays for b in breakers)
 
@@ -391,7 +443,8 @@ def compile_project_pipeline(pplan: ProjectStreamPlan, rows: int, *,
             trace_marker()
         build_flat = arrays[:n_build]
         morsel = arrays[n_build:]
-        valid = jnp.arange(rows, dtype=jnp.int32) < n_valid
+        off = jax.lax.axis_index(axis) * n_loc if sharded else 0
+        valid = off + jnp.arange(n_loc, dtype=jnp.int32) < n_valid
         lit_pos = [0]
         breaker_pos = [0]
 
@@ -444,9 +497,17 @@ def compile_project_pipeline(pplan: ProjectStreamPlan, rows: int, *,
         cols, mask = eval_node(pplan.node)
         return mask, tuple(cols[c] for c in pplan.out_cols)
 
+    raw = step
+    if sharded:
+        raw = shard_map(
+            step, mesh=shard.mesh,
+            in_specs=(P(), P()) + (P(),) * n_build
+            + (P(axis),) * len(pplan.stream_cols),
+            out_specs=(P(axis), P(axis)), check_rep=False)
     return CompiledProject(
         pplan.base_scan.table, pplan.stream_cols, breakers, rows,
-        pplan.out_cols, jax.jit(step), step)
+        pplan.out_cols, jax.jit(raw), raw,
+        shard=shard if sharded else None)
 
 
 def _account_morsel(telemetry, metrics, i: int, t0: float, t1: float,

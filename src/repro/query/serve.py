@@ -355,7 +355,8 @@ class _MorselStream:
             for phys in live_phys:
                 ex.tel.ledger.record_plan(
                     phys, dt * share, moved * share, mode="serve",
-                    scale=1.0 / self.spec.n_morsels)
+                    scale=1.0 / self.spec.n_morsels,
+                    shards=ex.n_shards)
         self.pos = (self.pos + 1) % self.spec.n_morsels
         return done
 

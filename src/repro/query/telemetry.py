@@ -264,6 +264,10 @@ class LedgerRow:
     measured_s: float
     mode: str = "eager"              # eager | fused | stream
     attributed: bool = False
+    shard: int = -1                  # shard id under a sharded placement
+                                     # (-1 = not shard-attributed)
+    table: str = ""                  # (table, column) a filter row's bytes
+    column: str = ""                 # belong to — selectivity feedback key
 
     @property
     def drift_bytes(self) -> float:
@@ -303,12 +307,14 @@ class BandwidthLedger:
     def record(self, *, op: str, impl: str, placement: str,
                predicted_bytes: float, predicted_s: float,
                measured_bytes: float, measured_s: float,
-               mode: str = "eager", attributed: bool = False) -> None:
+               mode: str = "eager", attributed: bool = False,
+               shard: int = -1, table: str = "", column: str = "") -> None:
         if not self.enabled:
             return
         row = LedgerRow(op, impl, placement, float(predicted_bytes),
                         float(predicted_s), float(measured_bytes),
-                        float(measured_s), mode, attributed)
+                        float(measured_s), mode, attributed, shard,
+                        table, column)
         with self._lock:
             if len(self.rows) >= self.max_rows:
                 self.dropped += 1
@@ -316,7 +322,8 @@ class BandwidthLedger:
             self.rows.append(row)
 
     def record_plan(self, phys, measured_s: float, measured_bytes: float,
-                    *, mode: str, scale: float = 1.0) -> None:
+                    *, mode: str, scale: float = 1.0,
+                    shards: int = 1) -> None:
         """Attribute one fused/streamed pipeline's fenced measurement
         across its physical operators, proportional to each op's share
         of the predicted cost (bytes pro-rated the same way).  Every
@@ -324,20 +331,35 @@ class BandwidthLedger:
         when only the pipeline boundary is fenceable.  ``scale`` shrinks
         the plan's predictions to the measured slice — the serving
         streams fence ONE morsel at a time, so they record against
-        ``1/n_morsels`` of the whole-plan prediction."""
+        ``1/n_morsels`` of the whole-plan prediction.
+
+        ``shards > 1`` splits every sharded-placement op's row into one
+        row PER SHARD (bytes and seconds divided evenly — the shard_map
+        step is one fenced dispatch, so per-shard skew is not separately
+        observable).  Aggregate sums are unchanged, which keeps
+        ``window_drift`` / ``calibration_overlay`` arithmetic identical;
+        the per-shard rows are what lets a drift report (and the
+        recalibration loop) see sharded traffic as n channel streams.
+        Filter rows additionally carry their (table, column) so
+        ``selectivity_corrections`` can key the cardinality feedback."""
         if not self.enabled or phys is None:
             return
         nodes = list(_walk(phys))
         total_s = sum(p.cost_s for p in nodes) or 1.0
         total_b = sum(p.n_bytes for p in nodes) or 1.0
         for p in nodes:
-            self.record(
-                op=p.op, impl=p.impl, placement=p.placement,
-                predicted_bytes=p.n_bytes * scale,
-                predicted_s=p.cost_s * scale,
-                measured_bytes=measured_bytes * (p.n_bytes / total_b),
-                measured_s=measured_s * (p.cost_s / total_s),
-                mode=mode, attributed=True)
+            table, column = _filter_attribution(p)
+            n = shards if (shards > 1 and p.placement == "sharded") else 1
+            for k in range(n):
+                self.record(
+                    op=p.op, impl=p.impl, placement=p.placement,
+                    predicted_bytes=p.n_bytes * scale / n,
+                    predicted_s=p.cost_s * scale / n,
+                    measured_bytes=measured_bytes * (p.n_bytes / total_b)
+                    / n,
+                    measured_s=measured_s * (p.cost_s / total_s) / n,
+                    mode=mode, attributed=True,
+                    shard=k if n > 1 else -1, table=table, column=column)
 
     # -- aggregation --------------------------------------------------------- #
 
@@ -405,6 +427,31 @@ class BandwidthLedger:
             a["drift_bytes"] = a["measured_bytes"] / a["predicted_bytes"] \
                 if a["predicted_bytes"] else 0.0
         return agg, nxt
+
+    def selectivity_corrections(self, *, start: int = 0, min_rows: int = 1
+                                ) -> Dict[Tuple[str, str], float]:
+        """Per-(table, column) measured-over-predicted BYTES ratio across
+        the rows that carry a filter attribution — the PR-7 leftover:
+        cardinality (drift_bytes) feedback into selectivity estimates,
+        not just bandwidth constants.  A ratio above 1 means the filter
+        passed more rows than the uniform-domain estimate predicted;
+        ``Executor.recost`` folds these into
+        ``CostModel.sel_corrections``, where ``estimate_rows`` applies
+        them CLAMPED (cost.SEL_CORRECTION_CLAMP) so a single bad window
+        can never swing a plan by more than the clamp bound."""
+        with self._lock:
+            rows = self.rows[start:]
+        acc: Dict[Tuple[str, str], dict] = {}
+        for r in rows:
+            if not r.table or not r.column or r.predicted_bytes <= 0:
+                continue
+            a = acc.setdefault((r.table, r.column),
+                               {"p": 0.0, "m": 0.0, "n": 0})
+            a["p"] += r.predicted_bytes
+            a["m"] += r.measured_bytes
+            a["n"] += 1
+        return {k: a["m"] / a["p"] for k, a in acc.items()
+                if a["n"] >= min_rows and a["p"] > 0}
 
     def calibration_overlay(self, model, *, start: int = 0) -> dict:
         """Measured achieved bandwidth folded back into the
@@ -491,6 +538,20 @@ def _walk(p):
     yield p
     for c in p.children:
         yield from _walk(c)
+
+
+def _filter_attribution(p) -> Tuple[str, str]:
+    """(table, column) of a filter PhysNode's predicate, "" otherwise.
+    Walks the logical child chain structurally (child / probe-side left)
+    to the base Scan, so telemetry needs no import of the plan DSL."""
+    if p.op not in ("filter", "filter_project"):
+        return "", ""
+    node = getattr(p, "logical", None)
+    column = getattr(node, "column", "") or ""
+    n = getattr(node, "child", None)
+    while n is not None and not hasattr(n, "table"):
+        n = getattr(n, "child", None) or getattr(n, "left", None)
+    return (getattr(n, "table", "") or "", column)
 
 
 # --------------------------------------------------------------------------- #

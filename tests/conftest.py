@@ -1,5 +1,21 @@
+import os
+
 import numpy as np
 import pytest
+
+# Simulated device mesh for the sharded-execution tests: REPRO_HOST_DEVICES=N
+# forces N host (CPU) devices BEFORE jax initializes (the import below
+# transitively imports jax, so this must stay at the very top).  Opt-in —
+# CI's sharded leg sets it to 8; unset/"0"/"off"/"1" leave the platform
+# alone (the model-arch tests pin shapes to the real device count), and
+# an XLA_FLAGS that already pins a device count is left untouched.
+_n_dev = os.environ.get("REPRO_HOST_DEVICES", "0").lower()
+if _n_dev not in ("", "0", "off", "no", "1") \
+        and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={int(_n_dev)}").strip()
 
 # REPRO_CACHE=0 force-disables the semantic cache inside Executor (the
 # CI leg pinning the cache-off execution paths).  Tests that assert
@@ -7,7 +23,7 @@ import pytest
 # and they are skipped in that leg instead of failing.  The parse lives
 # in ONE place (repro.query.cache.cache_disabled) so the skips and the
 # runtime gate can never disagree.
-from repro.query.cache import cache_disabled
+from repro.query.cache import cache_disabled  # noqa: E402
 
 CACHE_DISABLED = cache_disabled()
 
@@ -17,16 +33,25 @@ def pytest_configure(config):
         "markers",
         "requires_cache: asserts semantic-cache behavior; skipped when "
         "REPRO_CACHE=0 disables the cache")
+    config.addinivalue_line(
+        "markers",
+        "requires_mesh: needs 2+ devices (sharded execution); skipped "
+        "when the platform exposes only one")
 
 
 def pytest_collection_modifyitems(config, items):
-    if not CACHE_DISABLED:
-        return
-    skip = pytest.mark.skip(
+    import jax
+    one_device = len(jax.devices()) < 2
+    skip_mesh = pytest.mark.skip(
+        reason="needs 2+ devices (set REPRO_HOST_DEVICES or XLA_FLAGS="
+               "--xla_force_host_platform_device_count=N)")
+    skip_cache = pytest.mark.skip(
         reason="REPRO_CACHE=0: the semantic cache is force-disabled")
     for item in items:
-        if item.get_closest_marker("requires_cache"):
-            item.add_marker(skip)
+        if one_device and item.get_closest_marker("requires_mesh"):
+            item.add_marker(skip_mesh)
+        if CACHE_DISABLED and item.get_closest_marker("requires_cache"):
+            item.add_marker(skip_cache)
 
 
 @pytest.fixture(scope="session")
