@@ -212,11 +212,13 @@ def main(out_path: str = "BENCH_pipeline.json", *, n_rows: int = 1 << 17,
     # --- larger than one placement: stream-only execution -------------------
     cap = lineitem.column("orderkey").nbytes // 4       # a quarter-table
     ex_cap = make_executor(placement_capacity_bytes=cap)
+    # the optimized batch path now spills instead of refusing (PR 9) —
+    # probe the refusal on the forced-eager path, which stays gated
     eager_refused = False
     try:
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", RuntimeWarning)
-            ex_cap.execute(q).value
+            ex_cap.execute(q, mode="eager").value
     except PlacementCapacityError:
         eager_refused = True
     # 3 streamed columns; floor-aligned to the engine count so the

@@ -20,6 +20,7 @@ def main() -> None:
         observability_figures, observability_smoke)
     from benchmarks.bench_qos import qos_figures, qos_smoke
     from benchmarks.bench_shard import shard_figures, shard_smoke
+    from benchmarks.bench_tiering import tiering_smoke
     from benchmarks.calibrate import calibrate
     smoke = "--smoke" in sys.argv
 
@@ -43,11 +44,13 @@ def main() -> None:
         # the adaptive-replan correctness invariants; shard_smoke
         # re-execs itself under 8 forced host devices and hard-gates
         # scaling monotonicity, the shuffle/broadcast crossover, and
-        # sharded-vs-oracle bit-identity
+        # sharded-vs-oracle bit-identity; tiering_smoke hard-gates the
+        # over-capacity spill sweep, the kill-and-restart warm start
+        # (real child processes), and demote-vs-evict hit rates
         fns = [fn for fn in ALL if fn.__name__ in
                ("fig2_bandwidth", "tab3_roofline")] + \
               [subsumption_smoke, observability_smoke, qos_smoke,
-               shard_smoke]
+               shard_smoke, tiering_smoke]
     if only:
         fns = [fn for fn in fns if only in fn.__name__]
 

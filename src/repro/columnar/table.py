@@ -9,6 +9,7 @@ granular slices for the streaming execution path.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -52,12 +53,21 @@ class MorselSpec:
 
 @dataclasses.dataclass
 class Column:
-    data: jax.Array                    # (N,)
-    name: str
+    data: jax.Array                    # (N,) — or np.ndarray/np.memmap
+    name: str                          # when tier != "device"
+    # memory-hierarchy tier the backing lives on ("device" | "host" |
+    # "disk"): host columns are plain numpy arrays, disk columns are
+    # read-only np.memmap views over an .npy spill file.  Morsel slicing
+    # promotes lower-tier bytes through the prefetch thread.
+    tier: str = "device"
 
     @property
     def dtype(self):
         return self.data.dtype
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.data.size) * int(self.data.dtype.itemsize)
 
     def __len__(self):
         return int(self.data.shape[0])
@@ -96,6 +106,50 @@ class Table:
                 for k, c in self.columns.items()}
         return Table(self.name, cols, plan, self.version)
 
+    # -- tier moves (device <-> host <-> disk) ------------------------------ #
+    #
+    # Demotion/promotion move WHERE the bytes live, never WHAT they are:
+    # the table version stays put, so plan fingerprints and cached
+    # results computed against the column remain valid across moves.
+
+    def column_tier(self, name: str) -> str:
+        return self.columns[name].tier
+
+    def demote_column(self, name: str, tier: str,
+                      spill_dir: Optional[str] = None) -> "Table":
+        """Push one column's backing down to ``tier``: "host" converts to
+        a numpy array, "disk" writes an .npy under ``spill_dir`` and
+        re-opens it as a read-only memmap (so resident host bytes drop to
+        the page cache's discretion)."""
+        col = self.columns[name]
+        if col.tier == tier:
+            return self
+        host = np.asarray(col.data)
+        if tier == "host":
+            self.columns[name] = Column(host, name, "host")
+        elif tier == "disk":
+            assert spill_dir, "disk demotion needs a spill directory"
+            os.makedirs(spill_dir, exist_ok=True)
+            path = os.path.join(spill_dir,
+                                f"{self.name}__{name}__v{self.version}.npy")
+            if not os.path.exists(path):
+                np.save(path, host)
+            self.columns[name] = Column(np.load(path, mmap_mode="r"),
+                                        name, "disk")
+        else:
+            assert tier == "device", tier
+            return self.promote_column(name)
+        return self
+
+    def promote_column(self, name: str) -> "Table":
+        """Bring a host/disk column back onto the device wholesale (the
+        streaming path instead promotes morsel-by-morsel)."""
+        col = self.columns[name]
+        if col.tier != "device":
+            self.columns[name] = Column(jnp.asarray(np.asarray(col.data)),
+                                        name)
+        return self
+
     # -- morsel views (streaming execution path) ---------------------------- #
 
     def morsel(self, spec: MorselSpec, i: int,
@@ -109,8 +163,19 @@ class Table:
         n_valid = stop - start
         out = {}
         for c in (columns if columns is not None else tuple(self.columns)):
-            d = self.columns[c].data[start:stop]
-            if n_valid < spec.rows:
+            col = self.columns[c]
+            d = col.data[start:stop]
+            if col.tier != "device":
+                # host/disk-resident: slice in numpy (a memmap slice is
+                # the disk read) and pad in numpy, so the whole promotion
+                # — read + H2D — happens wherever the CALLER runs this,
+                # i.e. inside the streaming driver's prefetch thread,
+                # overlapped with compute exactly like plain H2D today
+                d = np.asarray(d)
+                if n_valid < spec.rows:
+                    d = np.concatenate(
+                        [d, np.zeros((spec.rows - n_valid,), d.dtype)])
+            elif n_valid < spec.rows:
                 d = jnp.concatenate(
                     [d, jnp.zeros((spec.rows - n_valid,), d.dtype)])
             out[c] = d

@@ -32,6 +32,12 @@ from repro.query.pipeline import (                               # noqa: F401
 from repro.query.exec import (                                   # noqa: F401
     Catalog, Executor, PlacementCapacityError, Result, sql_like_query,
 )
+from repro.query.tiering import (                                # noqa: F401
+    SpillPlan, TierBudgets, default_spill_dir, plan_spill,
+)
+from repro.query.persist import (                                # noqa: F401
+    load_state, save_state, warm_start,
+)
 from repro.query.serve import (                                  # noqa: F401
     AdaptivePolicy, QueryRecord, QueryServer, TenantSpec,
 )

@@ -31,6 +31,18 @@ wins.  Version lives inside the bucket key, so a mutation makes a stale
 bucket unreachable; ``invalidate_table``/``sync_versions`` sweep it too
 so dead interval metadata never outlives its entries.
 
+Residency is TIERED (PR 9): the byte budget above prices the fast
+(device) tier, and an optional ``host_budget_bytes`` opens a second,
+slower tier backed by host numpy arrays.  A device eviction victim is
+*demoted* — its value converted to host buffers, its key still
+resident and hittable — instead of dropped; only the bottom tier
+evicts for real.  A host hit is served in place and promoted back to
+the device tier when free room (and the tenant's device share) allows.
+Demotion/promotion move WHERE bytes live, never WHAT they are, so
+fingerprint keys and the subsumption index stay valid across moves.
+``host_budget_bytes=0`` (the default) disables the host tier and
+reproduces the evict-only behavior exactly.
+
 The cache may be SHARED by several executors over one catalog (the
 multi-tenant posture: Wang et al. show effective HBM bandwidth collapses
 under uncoordinated concurrent access, so tenants should share one
@@ -46,9 +58,50 @@ import os
 import threading
 from typing import Dict, Hashable, Iterable, Mapping, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.columnar.table import Column, Table
 from repro.query import telemetry as tm
 
 DEFAULT_BUDGET_BYTES = 64 << 20          # 64 MiB of materialized state
+
+
+def _to_host(value):
+    """Convert a cached value's device buffers to host numpy so a
+    demotion actually frees the fast tier (not just re-labels it).
+    Tables keep name/plan/version — only the column backing moves."""
+    if isinstance(value, Table):
+        return Table(value.name,
+                     {k: Column(np.asarray(c.data), k, "host")
+                      for k, c in value.columns.items()},
+                     value.plan, value.version)
+    if isinstance(value, tuple):
+        return tuple(_to_host(v) for v in value)
+    if isinstance(value, list):
+        return [_to_host(v) for v in value]
+    if isinstance(value, jax.Array):
+        return np.asarray(value)
+    return value
+
+
+def _to_device(value):
+    """Inverse of ``_to_host`` for promotion.  Consumers also accept
+    host values as-is (jnp ops coerce numpy), so promotion is an
+    optimization, never a correctness requirement."""
+    if isinstance(value, Table):
+        return Table(value.name,
+                     {k: Column(jnp.asarray(np.asarray(c.data)), k)
+                      for k, c in value.columns.items()},
+                     value.plan, value.version)
+    if isinstance(value, tuple):
+        return tuple(_to_device(v) for v in value)
+    if isinstance(value, list):
+        return [_to_device(v) for v in value]
+    if isinstance(value, np.ndarray):
+        return jnp.asarray(value)
+    return value
 
 
 def cache_disabled() -> bool:
@@ -74,6 +127,9 @@ class CacheEntry:
     interval: Optional[Tuple[str, str, int, int, int]] = None
     # owning tenant (None = shared/unattributed) for byte-share accounting
     tenant: Optional[str] = None
+    # residency tier ("device" | "host"): host entries hold numpy-backed
+    # values and count against host_budget_bytes, not budget_bytes
+    tier: str = "device"
 
     def score(self, model) -> float:
         return model.cache_score(self.recompute_s, self.n_bytes,
@@ -89,7 +145,8 @@ class SemanticCache:
     """
 
     def __init__(self, budget_bytes: int = DEFAULT_BUDGET_BYTES, *,
-                 model=None, telemetry: Optional["tm.Telemetry"] = None):
+                 model=None, telemetry: Optional["tm.Telemetry"] = None,
+                 host_budget_bytes: int = 0):
         if model is None:
             from repro.query.cost import CostModel
             model = CostModel(1)
@@ -99,6 +156,9 @@ class SemanticCache:
         # the shared REPRO_TRACE-gated global, no-ops when disabled
         self.tel = telemetry if telemetry is not None else tm.get()
         self.budget_bytes = int(budget_bytes)
+        # host (demotion) tier budget; 0 disables the tier entirely and
+        # restores the exact evict-only legacy behavior
+        self.host_budget_bytes = int(host_budget_bytes)
         self._entries: Dict[Hashable, CacheEntry] = {}
         # (table, column, version) -> {entry key: (lo, hi)} — the
         # subsumption index over admitted selection bitmaps
@@ -114,10 +174,17 @@ class SemanticCache:
         # share of the whole budget (weight / sum(weights) * budget).
         # Empty = no QoS partitioning, every put is uncapped (legacy).
         self._tenant_shares: Dict[str, float] = {}
+        # per-tier tenant byte books: `_tenant_bytes` is the device tier
+        # (the legacy share-enforced map), `_tenant_bytes_host` mirrors
+        # it for demoted entries so stats reconcile to resident bytes
         self._tenant_bytes: Dict[str, int] = {}
+        self._tenant_bytes_host: Dict[str, int] = {}
         self._seen_versions: Dict[str, int] = {}
         self._tick = 0
         self.used_bytes = 0
+        self.host_used_bytes = 0
+        self.demoted = 0
+        self.promoted = 0
         self.hits = 0
         self.misses = 0
         self.admitted = 0
@@ -147,6 +214,11 @@ class SemanticCache:
             e.hits += 1
             self._tick += 1
             e.tick = self._tick
+            if e.tier == "host":
+                # host hit: promote back to the fast tier when free room
+                # (and the tenant's device share) allows; otherwise the
+                # host-resident value is served in place
+                self._promote_locked(e)
             return e
 
     def peek(self, key: Hashable) -> Optional[CacheEntry]:
@@ -254,6 +326,109 @@ class SemanticCache:
         total = sum(self._tenant_shares.values())
         return int(self.budget_bytes * w / total)
 
+    # -- tier accounting (device <-> host) ----------------------------------- #
+
+    def _account_add(self, e: CacheEntry) -> None:
+        if e.tier == "host":
+            self.host_used_bytes += e.n_bytes
+            book = self._tenant_bytes_host
+        else:
+            self.used_bytes += e.n_bytes
+            book = self._tenant_bytes
+        if e.tenant is not None:
+            book[e.tenant] = book.get(e.tenant, 0) + e.n_bytes
+
+    def _account_sub(self, e: CacheEntry) -> None:
+        if e.tier == "host":
+            self.host_used_bytes -= e.n_bytes
+            book = self._tenant_bytes_host
+        else:
+            self.used_bytes -= e.n_bytes
+            book = self._tenant_bytes
+        if e.tenant is not None:
+            # exact arithmetic: zero removes the key, anything else is
+            # stored AS IS — a negative would previously be silently
+            # swallowed (the drift check_invariants now flushes out)
+            left = book.get(e.tenant, 0) - e.n_bytes
+            if left:
+                book[e.tenant] = left
+            else:
+                book.pop(e.tenant, None)
+
+    def _evict(self, e: CacheEntry, *, displaced_by: str) -> None:
+        """Displace a device-tier resident: demote to the host tier when
+        the budget allows (entry stays hittable), else drop for real.
+        Host-tier residents (the bottom tier) always drop."""
+        if e.tier == "device" and self._demote_locked(e):
+            if self.tel.enabled:
+                self.tel.instant("cache.demote", kind=e.kind,
+                                 n_bytes=e.n_bytes,
+                                 displaced_by=displaced_by)
+            return
+        self._drop(e)
+        self.evicted += 1
+        if self.tel.enabled:
+            self.tel.instant("cache.evict", kind=e.kind,
+                             n_bytes=e.n_bytes,
+                             score=e.score(self.model),
+                             displaced_by=displaced_by)
+
+    def _demote_locked(self, e: CacheEntry) -> bool:
+        """Move a device entry's residency to the host tier, winning its
+        host bytes from strictly lower-scored host residents (the same
+        priced admission the device tier runs)."""
+        if self.host_budget_bytes <= 0 or e.n_bytes > self.host_budget_bytes:
+            return False
+        score = e.score(self.model)
+        need = self.host_used_bytes + e.n_bytes - self.host_budget_bytes
+        victims = []
+        if need > 0:
+            hosted = [h for h in self._entries.values()
+                      if h.tier == "host"]
+            for h in sorted(hosted, key=lambda h: (h.score(self.model),
+                                                   h.tick)):
+                if h.score(self.model) >= score:
+                    break
+                victims.append(h)
+                need -= h.n_bytes
+                if need <= 0:
+                    break
+            if need > 0:
+                return False
+        for h in victims:
+            self._drop(h)
+            self.evicted += 1
+            if self.tel.enabled:
+                self.tel.instant("cache.evict", kind=h.kind, tier="host",
+                                 n_bytes=h.n_bytes,
+                                 score=h.score(self.model),
+                                 displaced_by=e.kind)
+        self._account_sub(e)
+        e.value = _to_host(e.value)
+        e.tier = "host"
+        self._account_add(e)
+        self.demoted += 1
+        return True
+
+    def _promote_locked(self, e: CacheEntry) -> None:
+        """Bring a host-tier hit back onto the device tier iff it fits
+        the free device room and the owner's share — promotion never
+        starts an eviction fight (the hit is already being served)."""
+        if self.used_bytes + e.n_bytes > self.budget_bytes:
+            return
+        cap = self._tenant_cap_locked(e.tenant)
+        if cap is not None and (self._tenant_bytes.get(e.tenant, 0)
+                                + e.n_bytes) > cap:
+            return
+        self._account_sub(e)
+        e.value = _to_device(e.value)
+        e.tier = "device"
+        self._account_add(e)
+        self.promoted += 1
+        if self.tel.enabled:
+            self.tel.instant("cache.promote", kind=e.kind,
+                             n_bytes=e.n_bytes)
+
     def put(self, key: Hashable, value: object, *, kind: str,
             n_bytes: int, recompute_s: float,
             tables: Iterable[str] = (),
@@ -305,7 +480,7 @@ class SemanticCache:
             t_need = (self._tenant_bytes.get(tenant, 0) + n_bytes - cap)
             if t_need > 0:
                 own = [e for e in self._entries.values()
-                       if e.tenant == tenant]
+                       if e.tenant == tenant and e.tier == "device"]
                 for e in sorted(own, key=lambda e: (e.score(self.model),
                                                     e.tick)):
                     if e.score(self.model) >= score:
@@ -328,8 +503,11 @@ class SemanticCache:
         if need > 0:
             # evict cheapest-to-rebuild-per-byte first, oldest breaking
             # ties; stop (and reject) before displacing anything the
-            # model prices above the candidate
-            for e in sorted(self._entries.values(),
+            # model prices above the candidate.  Only device residents
+            # fight here — host entries live under their own budget.
+            pool = [e for e in self._entries.values()
+                    if e.tier == "device"]
+            for e in sorted(pool,
                             key=lambda e: (e.score(self.model), e.tick)):
                 if e.key in seen:
                     continue
@@ -347,19 +525,11 @@ class SemanticCache:
                         n_bytes=n_bytes, score=score)
                 return False
         for e in victims:
-            self._drop(e)
-            self.evicted += 1
-            if self.tel.enabled:
-                self.tel.instant(
-                    "cache.evict", kind=e.kind, n_bytes=e.n_bytes,
-                    score=e.score(self.model), displaced_by=kind)
+            self._evict(e, displaced_by=kind)
         self._tick += 1
         cand.tick = self._tick
         self._entries[key] = cand
-        self.used_bytes += n_bytes
-        if tenant is not None:
-            self._tenant_bytes[tenant] = (
-                self._tenant_bytes.get(tenant, 0) + n_bytes)
+        self._account_add(cand)
         self.admitted += 1
         if self.tel.enabled:
             self.tel.instant("cache.admit", kind=kind, n_bytes=n_bytes,
@@ -370,15 +540,50 @@ class SemanticCache:
                 (table, column, int(version)), {})[key] = (int(lo), int(hi))
         return True
 
+    def restore(self, key: Hashable, value: object, *, kind: str,
+                n_bytes: int, recompute_s: float,
+                tables: Iterable[str] = (),
+                interval: Optional[Tuple[str, str, int, int, int]] = None,
+                tenant: Optional[str] = None, hits: int = 0) -> bool:
+        """Persistence warm-start surface: re-admit a previously resident
+        entry without an eviction fight (the loader replays a snapshot
+        into a cold cache, so there is nothing worth displacing).  The
+        entry lands in the host tier when a host budget can hold it —
+        values arrive host-converted from disk anyway — else directly on
+        the device tier if the device budget has free room.  Returns
+        whether the entry was restored."""
+        n_bytes = max(int(n_bytes), 0)
+        with self._lock:
+            if key in self._entries:
+                return False
+            if (self.host_budget_bytes > 0
+                    and self.host_used_bytes + n_bytes
+                    <= self.host_budget_bytes):
+                tier = "host"
+                value = _to_host(value)
+            elif self.used_bytes + n_bytes <= self.budget_bytes:
+                tier = "device"
+                value = _to_device(value)
+            else:
+                return False
+            e = CacheEntry(key, kind, value, n_bytes, float(recompute_s),
+                           tuple(tables), hits=int(hits),
+                           interval=interval, tenant=tenant, tier=tier)
+            self._tick += 1
+            e.tick = self._tick
+            self._entries[key] = e
+            self._account_add(e)
+            self.admitted += 1
+            if interval is not None:
+                table, column, version, lo, hi = interval
+                self._intervals.setdefault(
+                    (table, column, int(version)), {})[key] = (int(lo),
+                                                               int(hi))
+            return True
+
     def _drop(self, e: CacheEntry) -> None:
         del self._entries[e.key]
-        self.used_bytes -= e.n_bytes
-        if e.tenant is not None:
-            left = self._tenant_bytes.get(e.tenant, 0) - e.n_bytes
-            if left > 0:
-                self._tenant_bytes[e.tenant] = left
-            else:
-                self._tenant_bytes.pop(e.tenant, None)
+        self._account_sub(e)
         if e.interval is not None:
             table, column, version, _, _ = e.interval
             bucket = self._intervals.get((table, column, int(version)))
@@ -430,19 +635,55 @@ class SemanticCache:
             self._intervals.clear()
             self._hinted.clear()
             self._tenant_bytes.clear()
+            self._tenant_bytes_host.clear()
             self.used_bytes = 0
+            self.host_used_bytes = 0
 
     # -- reporting ------------------------------------------------------------ #
+
+    def check_invariants(self) -> None:
+        """Reconcile the running byte books against the resident entries
+        (the S2 guard): per-tier used bytes, per-tier per-tenant shares,
+        and the interval index must all be EXACT functions of
+        ``_entries`` — any drift (e.g. a negative share silently
+        swallowed, or an index key outliving its entry) raises."""
+        with self._lock:
+            for tier, used, book in (
+                    ("device", self.used_bytes, self._tenant_bytes),
+                    ("host", self.host_used_bytes,
+                     self._tenant_bytes_host)):
+                res = [e for e in self._entries.values()
+                       if e.tier == tier]
+                want_used = sum(e.n_bytes for e in res)
+                assert used == want_used, (
+                    f"{tier} used_bytes drift: book={used} "
+                    f"resident={want_used}")
+                want: Dict[str, int] = {}
+                for e in res:
+                    if e.tenant is not None:
+                        want[e.tenant] = want.get(e.tenant, 0) + e.n_bytes
+                assert book == want, (
+                    f"{tier} tenant byte-share drift: book={book} "
+                    f"resident={want}")
+            for bkey, bucket in self._intervals.items():
+                for key in bucket:
+                    e = self._entries.get(key)
+                    assert e is not None and e.interval is not None, (
+                        f"interval index key {key!r} in bucket {bkey} "
+                        f"has no resident entry")
 
     def stats_dict(self) -> dict:
         with self._lock:
             return self._stats_locked()
 
     def _stats_locked(self) -> dict:
+        self.check_invariants()
         total = self.hits + self.misses
         by_kind: Dict[str, int] = {}
+        by_tier: Dict[str, int] = {}
         for e in self._entries.values():
             by_kind[e.kind] = by_kind.get(e.kind, 0) + 1
+            by_tier[e.tier] = by_tier.get(e.tier, 0) + 1
         return {
             "semantic_cache_subsumption_hits": self.subsumption_hits,
             "semantic_cache_subsumption_misses": self.subsumption_misses,
@@ -451,6 +692,11 @@ class SemanticCache:
             "semantic_cache_entries_by_kind": by_kind,
             "semantic_cache_used_bytes": self.used_bytes,
             "semantic_cache_budget_bytes": self.budget_bytes,
+            "semantic_cache_entries_by_tier": by_tier,
+            "semantic_cache_host_used_bytes": self.host_used_bytes,
+            "semantic_cache_host_budget_bytes": self.host_budget_bytes,
+            "semantic_cache_demoted": self.demoted,
+            "semantic_cache_promoted": self.promoted,
             "semantic_cache_hits": self.hits,
             "semantic_cache_misses": self.misses,
             "semantic_cache_hit_rate": self.hits / total if total else 0.0,
@@ -459,6 +705,8 @@ class SemanticCache:
             "semantic_cache_evicted": self.evicted,
             "semantic_cache_invalidated": self.invalidated,
             "semantic_cache_tenant_bytes": dict(self._tenant_bytes),
+            "semantic_cache_tenant_bytes_host": dict(
+                self._tenant_bytes_host),
             "semantic_cache_tenant_caps": {
                 t: self._tenant_cap_locked(t)
                 for t in self._tenant_shares},

@@ -46,6 +46,28 @@ PALLAS_CALL_OVERHEAD = 12e-6
 # stream efficiencies
 H2D_GBPS = 16.0
 
+# fixed cost of dispatching one morsel's staging transfer (slicing the
+# host columns + the device_put round trip), independent of its size —
+# the term that makes tiny morsels a loss out of core: 128 one-KB-row
+# morsels pay this 128x where 12 budget-sized morsels pay it 12x.
+# Without it the overlap formula below is flat in morsel size and the
+# argmin degenerates to the smallest candidate.
+STAGE_OVERHEAD_S = 1.2e-4
+
+# memory-hierarchy tiers below the device placement (the paper's
+# HBM <-> DDR4 hierarchy generalized one rung further to disk).  A
+# column/cache entry lives on exactly one tier; promotion crosses the
+# interconnect back toward the device.  DDR4-2400-ish single-channel
+# host DRAM and NVMe-class sequential disk reads; all three are
+# calibration overlay keys alongside h2d_gbps.
+D2H_GBPS = 16.0            # device -> host demotion (same PCIe link)
+HOST_DRAM_GBPS = 19.2      # host DRAM streaming (paper's DDR4 channel)
+DISK_GBPS = 2.0            # sequential NVMe read into page cache
+
+# tier ordering, top (fastest, smallest) to bottom: the spill planner
+# fills in this order and the cache evicts only from the last entry
+TIERS = ("device", "host", "disk")
+
 CALIBRATION_FILE = "BENCH_calibration.json"
 
 
@@ -234,13 +256,23 @@ class CostModel:
         self.call_overhead = {"xla": XLA_CALL_OVERHEAD,
                               "pallas": PALLAS_CALL_OVERHEAD}
         self.h2d_gbps = H2D_GBPS
+        self.stage_overhead_s = STAGE_OVERHEAD_S
+        # memory-hierarchy tier channels (device HBM aggregate is
+        # bandwidth_gbps(placement); these price the rungs below it)
+        self.d2h_gbps = D2H_GBPS
+        self.host_gbps = HOST_DRAM_GBPS
+        self.disk_gbps = DISK_GBPS
         # the PRISTINE per-backend constants, captured before any overlay
         # ever touches the live dicts: every calibration application
         # re-baselines against these, so applying the same overlay twice
         # (or overlapping online overlays) can never compound
         self._baseline = {"stream_eff": dict(self.stream_eff),
                           "call_overhead": dict(self.call_overhead),
-                          "h2d_gbps": self.h2d_gbps}
+                          "h2d_gbps": self.h2d_gbps,
+                          "stage_overhead_s": self.stage_overhead_s,
+                          "d2h_gbps": self.d2h_gbps,
+                          "host_gbps": self.host_gbps,
+                          "disk_gbps": self.disk_gbps}
         self.calibrated_from = None
         self.n_calibrations = 0
         if calibration:
@@ -267,6 +299,10 @@ class CostModel:
         self.stream_eff = dict(self._baseline["stream_eff"])
         self.call_overhead = dict(self._baseline["call_overhead"])
         self.h2d_gbps = self._baseline["h2d_gbps"]
+        self.stage_overhead_s = self._baseline["stage_overhead_s"]
+        self.d2h_gbps = self._baseline["d2h_gbps"]
+        self.host_gbps = self._baseline["host_gbps"]
+        self.disk_gbps = self._baseline["disk_gbps"]
         for impl, meas in calibration.get("backends", {}).items():
             if impl not in self.stream_eff:
                 continue
@@ -276,17 +312,43 @@ class CostModel:
             over = meas.get("call_overhead_s")
             if over and over > 0:
                 self.call_overhead[impl] = float(over)
-        h2d = calibration.get("h2d_gbps")
-        if h2d and h2d > 0:
-            self.h2d_gbps = float(h2d)
+        for key in ("h2d_gbps", "d2h_gbps", "host_gbps", "disk_gbps",
+                    "stage_overhead_s"):
+            v = calibration.get(key)
+            if v and v > 0:
+                setattr(self, key, float(v))
         self.calibrated_from = calibration.get("backend", "measured")
         self.n_calibrations += 1
+
+    def calibration_snapshot(self) -> dict:
+        """The model's CURRENT constants in ``BENCH_calibration.json``
+        shape — what the persistence layer writes so a warm-started server
+        re-applies exactly the calibration state this process converged to
+        (including any drift-triggered ledger overlays)."""
+        snap = {"backend": self.calibrated_from or jax.default_backend(),
+                "backends": {impl: {"stream_eff": self.stream_eff[impl],
+                                    "call_overhead_s":
+                                        self.call_overhead[impl]}
+                             for impl in self.stream_eff}}
+        for key in ("h2d_gbps", "d2h_gbps", "host_gbps", "disk_gbps",
+                    "stage_overhead_s"):
+            snap[key] = getattr(self, key)
+        return snap
 
     def impls(self) -> Tuple[str, ...]:
         return ("xla", "pallas") if self.allow_pallas else ("xla",)
 
     def bandwidth_gbps(self, placement: str) -> float:
-        """Aggregate streaming bandwidth of one operator under a placement."""
+        """Aggregate streaming bandwidth of one operator under a placement.
+
+        ``placement`` also accepts the sub-device tiers ("host", "disk"):
+        a column resident there streams at the tier channel's bandwidth
+        regardless of hardware model — checked FIRST so the hardware
+        dispatch below never sees a tier name it doesn't price."""
+        if placement == "host":
+            return self.host_gbps
+        if placement == "disk":
+            return self.disk_gbps
         if self.hardware == "fpga":
             if placement == "sharded":
                 # the paper's channel-count sweep (Figs. 5-7): aggregate
@@ -354,6 +416,42 @@ class CostModel:
         return max(recompute_s, 0.0) * (1.0 + hits) \
             / max(float(n_bytes), 1.0)
 
+    # -- tier pricing (device <-> host <-> disk hierarchy) ------------------ #
+
+    def promotion_cost(self, n_bytes: float, src_tier: str) -> float:
+        """Seconds to move ``n_bytes`` from ``src_tier`` back onto the
+        device: host pays the H2D staging link, disk pays the sequential
+        read AND the staging link (serial within one prefetch-thread
+        stage; the streaming driver overlaps the whole stage with
+        compute, exactly like today's H2D overlap)."""
+        if src_tier == "device":
+            return 0.0
+        t = n_bytes / (self.h2d_gbps * 1e9)
+        if src_tier == "disk":
+            t += n_bytes / (self.disk_gbps * 1e9)
+        return t
+
+    def demotion_cost(self, n_bytes: float, dst_tier: str) -> float:
+        """Seconds to push ``n_bytes`` down to ``dst_tier`` (D2H copy,
+        plus the disk write when demoting all the way down)."""
+        if dst_tier == "device":
+            return 0.0
+        t = n_bytes / (self.d2h_gbps * 1e9)
+        if dst_tier == "disk":
+            t += n_bytes / (self.disk_gbps * 1e9)
+        return t
+
+    def tier_score(self, recompute_s: float, n_bytes: int,
+                   hits: int = 0, tier: str = "device") -> float:
+        """``cache_score`` generalized per tier: a hit on a lower-tier
+        entry still pays the promotion back up, so its value density is
+        the NET seconds avoided per resident byte.  This is the single
+        currency the cache's demote-vs-evict decision and the spill
+        planner's tier choice both price in."""
+        net = max(recompute_s, 0.0) - self.promotion_cost(
+            float(max(n_bytes, 1)), tier)
+        return max(net, 0.0) * (1.0 + hits) / max(float(n_bytes), 1.0)
+
     def refine_price(self, cached_rows: float, *, impl: str = "xla",
                      placement: str = "partitioned") -> float:
         """Seconds to serve a selection by REFINING a cached superset
@@ -403,19 +501,28 @@ class CostModel:
     def morsel_cost(self, total_rows: float, morsel_rows: int, n_cols: int,
                     *, impl: str = "xla", placement: str = "partitioned",
                     flops_per_row: float = 0.0,
-                    include_transfer: bool = True) -> float:
+                    include_transfer: bool = True,
+                    src_tier: str = "host") -> float:
         """Seconds to stream ``total_rows`` in double-buffered morsels: the
-        next morsel's placement transfer (H2D at ``h2d_gbps``) overlaps the
-        current morsel's compute, so steady state pays max(transfer,
-        compute) per morsel and the pipeline ends add the smaller term
-        once.  Per-dispatch overhead rides on the compute term — the
-        pressure toward larger morsels that transfer overlap pushes
-        against.  ``include_transfer=False`` prices the in-memory regime
-        where morsel placements are cached across executions (no H2D per
-        run), which pushes toward large morsels."""
+        next morsel's promotion transfer (H2D from host, disk read + H2D
+        from disk — ``promotion_cost``) overlaps the current morsel's
+        compute, so steady state pays max(transfer, compute) per morsel
+        and the pipeline ends add the smaller term once.  Per-dispatch
+        overhead rides on the compute term — the pressure toward larger
+        morsels that transfer overlap pushes against.
+        ``include_transfer=False`` prices the in-memory regime where
+        morsel placements are cached across executions (no promotion per
+        run), which pushes toward large morsels; ``src_tier`` names the
+        tier the stream source is resident on (default "host", the
+        classic H2D regime)."""
         n_morsels = max(-(-int(total_rows) // int(morsel_rows)), 1)
         m_bytes = morsel_rows * BYTES_PER_VALUE * n_cols
-        t_x = m_bytes / (self.h2d_gbps * 1e9) if include_transfer else 0.0
+        # each staged morsel pays a fixed dispatch/slicing cost on top of
+        # its proportional transfer — the out-of-core pressure toward
+        # budget-sized morsels (the in-memory regime caches placements,
+        # so it keeps the pure bandwidth/overlap trade)
+        t_x = (self.promotion_cost(m_bytes, src_tier)
+               + self.stage_overhead_s) if include_transfer else 0.0
         t_c = self.stream_cost(m_bytes, impl=impl, placement=placement,
                                flops=flops_per_row * morsel_rows)
         return n_morsels * max(t_x, t_c) + min(t_x, t_c)
@@ -423,7 +530,8 @@ class CostModel:
     def choose_morsel_rows(self, total_rows: float, n_cols: int, *,
                            impl: str = "xla", align: Optional[int] = None,
                            flops_per_row: float = 0.0,
-                           include_transfer: bool = True) -> int:
+                           include_transfer: bool = True,
+                           src_tier: str = "host") -> int:
         """argmin of ``morsel_cost`` over power-of-two candidates, aligned
         to the engine count so one morsel shards evenly per pseudo-channel.
         Small morsels drown in dispatch overhead, huge ones serialize the
@@ -441,7 +549,8 @@ class CostModel:
         for rows in candidates:
             c = self.morsel_cost(total, rows, n_cols, impl=impl,
                                  flops_per_row=flops_per_row,
-                                 include_transfer=include_transfer)
+                                 include_transfer=include_transfer,
+                                 src_tier=src_tier)
             if c < best_cost:
                 best_rows, best_cost = rows, c
         return best_rows

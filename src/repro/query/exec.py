@@ -48,13 +48,22 @@ from repro.query.cost import (
     column_placements, key_is_unique, load_calibration, plan_physical,
 )
 from repro.query.optimize import optimize
+from repro.query.tiering import (
+    SpillPlan, TierBudgets, default_spill_dir, plan_spill,
+)
+
+_TIER_RANK = {"device": 0, "host": 1, "disk": 2}
 
 
 class PlacementCapacityError(RuntimeError):
     """A whole-column placement exceeds the configured per-placement
-    capacity (the paper's 256 MiB pseudo-channel budget).  Eager paths
-    fail here; the morsel-streaming path places one morsel at a time and
-    completes regardless of dataset size."""
+    capacity (the paper's 256 MiB pseudo-channel budget).  Optimized
+    plans with a streamable spine no longer fail here — the executor
+    reroutes them through a priced device/host/disk spill plan — so this
+    survives only where spilling cannot help: the naive oracle and
+    forced-eager paths under an explicit capacity, a single morsel
+    larger than the budget, and working sets that overflow even the
+    disk tier."""
 
 
 class Catalog:
@@ -166,7 +175,8 @@ class Executor:
                  overlap_transfers: Optional[bool] = None,
                  telemetry: Optional[tm.Telemetry] = None,
                  tenant: Optional[str] = None,
-                 shards: Optional[int] = None):
+                 shards: Optional[int] = None,
+                 tier_budgets: Optional[TierBudgets] = None):
         self.catalog = catalog
         # tenant label every semantic-cache admission carries: with
         # per-tenant byte-budget shares configured on a SHARED cache,
@@ -210,7 +220,21 @@ class Executor:
                 and self.cost_model.n_shards != n_sh:
             # a caller-supplied model prices what this executor runs
             self.cost_model.n_shards = n_sh
-        self.placement_capacity_bytes = placement_capacity_bytes
+        # tiered placement posture.  ``tier_budgets`` (or the explicit
+        # device capacity, or the REPRO_PLACEMENT_CAP / REPRO_HOST_CAP /
+        # REPRO_DISK_CAP environment) bounds each memory tier; the device
+        # budget drives SPILL ROUTING of optimized over-capacity plans.
+        # The hard ``placed()`` gate stays keyed to an EXPLICIT capacity
+        # (constructor arg or tier_budgets.device): an environment-only
+        # posture forces the spill paths without making the naive oracle
+        # or forced-eager observability paths refuse to measure.
+        self._cap_explicit = placement_capacity_bytes is not None \
+            or (tier_budgets is not None
+                and tier_budgets.device is not None)
+        self.tier_budgets = tier_budgets if tier_budgets is not None \
+            else TierBudgets.from_env(placement_capacity_bytes)
+        self.placement_capacity_bytes = self.tier_budgets.device
+        self._spill_dir: Optional[str] = None
         # semantic result/subplan cache: opt-in (``cache_bytes`` budget,
         # or a shared SemanticCache instance) so differential baselines
         # and throughput benchmarks measure real execution by default
@@ -390,15 +414,29 @@ class Executor:
         key = (table, column, placement)
         if key not in self._placed:
             data = self.catalog.tables[table].column(column)
-            cap = self.placement_capacity_bytes
+            cap = self.placement_capacity_bytes if self._cap_explicit \
+                else None
             if cap is not None and data.nbytes > cap:
+                n_bytes = int(data.nbytes)
+                # floor-aligned suggested granularity for a 3-column
+                # stream (predicate + two carried values, the common
+                # shape); generalize as budget // (4 * n_stream_cols)
+                n_eng = self.plans["partitioned"].n_engines
+                suggest = max((int(cap) // (BYTES_PER_VALUE * 3))
+                              // n_eng * n_eng, n_eng)
                 raise PlacementCapacityError(
-                    f"column {table}.{column} ({placement}) is "
-                    f"{data.nbytes} bytes, over the {cap}-byte placement "
-                    "capacity.  Only probe-side stream columns can exceed "
-                    "it (mode='stream' places them one morsel at a time); "
-                    "build/replicated columns and eagerly-lowered plans "
-                    "need every placed column to fit one placement")
+                    f"working set over placement budget: column "
+                    f"{table}.{column} ({placement}) is {n_bytes} bytes "
+                    f"against the {int(cap)}-byte placement capacity "
+                    f"({n_bytes / cap:.1f}x over).  Remedy: execute with "
+                    f'mode="stream" and morsel_rows <= capacity // '
+                    f"(4 * n_stream_cols) — e.g. morsel_rows={suggest} "
+                    f"for a 3-column stream — so each morsel fits one "
+                    "placement; or configure host/disk tier budgets "
+                    "(TierBudgets / REPRO_HOST_CAP / REPRO_DISK_CAP) so "
+                    "the spill planner can demote it.  Build/replicated "
+                    "columns and eagerly-lowered plans need every placed "
+                    "column to fit one placement")
             plan = self.plans.get(placement)
             if plan is None or (plan.placement == "partitioned"
                                 and data.shape[0] % plan.n_engines != 0):
@@ -457,12 +495,36 @@ class Executor:
                                   time.perf_counter() - t0, mode=mode,
                                   result_cache_hit=True)
                 sp.set(outcome="miss")
+            # tiered placement: an over-budget working set gets a spill
+            # plan (columns demoted to host/disk, priced by the model)
+            # instead of a hard refusal; a batch-mode plan with a
+            # streamable spine reroutes onto the morsel driver, which
+            # promotes lower-tier morsels through the prefetch thread
+            spill = self._maybe_spill(node)
+            if mode == "batch" and spill is not None:
+                splan = pl.analyze(node, self.catalog.stats)
+                if splan is not None:
+                    sp.set(path="spill_stream")
+                    value, hit = self._run_stream(node, phys, splan,
+                                                  morsel_rows, spill=spill)
+                    self._admit_result(orig, node, phys, value)
+                    return Result(value, phys, hit,
+                                  time.perf_counter() - t0, mode="stream")
+                pplan = pl.analyze_project(node, self.catalog.stats)
+                if pplan is not None:
+                    sp.set(path="spill_stream_project")
+                    value = self._run_stream_project(node, phys, pplan,
+                                                     morsel_rows,
+                                                     spill=spill)
+                    self._admit_result(orig, node, phys, value)
+                    return Result(value, phys, False,
+                                  time.perf_counter() - t0, mode="stream")
             if mode == "stream":
                 splan = pl.analyze(node, self.catalog.stats)
                 if splan is not None:
                     sp.set(path="stream")
                     value, hit = self._run_stream(node, phys, splan,
-                                                  morsel_rows)
+                                                  morsel_rows, spill=spill)
                     self._admit_result(orig, node, phys, value)
                     return Result(value, phys, hit,
                                   time.perf_counter() - t0, mode="stream")
@@ -701,28 +763,110 @@ class Executor:
 
     # -- streaming path (morsel-driven pipeline) ----------------------------- #
 
+    def _maybe_spill(self, node: L.Node) -> Optional[SpillPlan]:
+        """Tier assignment for ``node``'s streamed working set when it
+        exceeds the device budget — the replacement for the hard
+        capacity refusal.  Returns None when every stream column fits
+        the device tier (or no budget / no streamable spine exists);
+        otherwise plans the hierarchy greedily in the cache-score
+        currency, DEMOTES the over-budget catalog columns to their
+        assigned tiers (host numpy / disk memmap — values unchanged, so
+        table versions do not move), and raises only when the working
+        set overflows even the disk budget."""
+        budget = self.tier_budgets.device
+        if budget is None:
+            return None
+        splan = pl.analyze(node, self.catalog.stats)
+        if splan is not None:
+            table, cols = splan.base_scan.table, splan.stream_cols
+            breakers = splan.breakers
+        else:
+            pplan = pl.analyze_project(node, self.catalog.stats)
+            if pplan is None:
+                return None
+            table, cols = pplan.base_scan.table, pplan.stream_cols
+            breakers = pplan.breakers
+        tab = self.catalog.tables[table]
+        sizes = [((table, c), int(tab.columns[c].nbytes)) for c in cols]
+        if not any(n > budget for _, n in sizes):
+            return None
+        # build-side bytes are device residents by construction (the
+        # replicated URAM analogue): carve them out of the device budget
+        # before stream columns compete for it
+        reserved = 0
+        for b in breakers:
+            bt = self.catalog.tables[b.table]
+            reserved += sum(int(bt.columns[c].nbytes)
+                            for c in (b.on, *b.value_cols))
+        plan = plan_spill(sizes, self.tier_budgets, self.cost_model,
+                          reserved_device=reserved)
+        if plan.overflow_bytes:
+            total = sum(n for _, n in sizes)
+            raise PlacementCapacityError(
+                f"working set of {total} bytes over table '{table}' "
+                f"overflows the whole tier hierarchy: {plan.describe()} "
+                f"(budgets device={self.tier_budgets.device} "
+                f"host={self.tier_budgets.host} "
+                f"disk={self.tier_budgets.disk}, "
+                f"{plan.overflow_bytes} bytes have no tier).  Raise a "
+                "tier budget or reduce the query's streamed column set")
+        if self._spill_dir is None:
+            self._spill_dir = default_spill_dir()
+        for (t, c), tier in plan.tiers.items():
+            if tier != "device":
+                self.catalog.tables[t].demote_column(c, tier,
+                                                     self._spill_dir)
+        self.metrics.set("exec.spilled_columns", sum(
+            1 for t in plan.tiers.values() if t != "device"))
+        self.tel.instant("exec.spill", table=table,
+                         plan=plan.describe())
+        return plan
+
+    def _spill_src_tier(self, spill: Optional[SpillPlan]) -> str:
+        """The slowest tier a spill plan streams from — what prices the
+        per-morsel promotion term when the model chooses granularity."""
+        if spill is None:
+            return "host"
+        worst = "device"
+        for t in spill.tiers.values():
+            if _TIER_RANK[t] > _TIER_RANK[worst]:
+                worst = t
+        return worst if worst != "device" else "host"
+
     def _run_stream(self, node: L.Node, phys: PhysNode,
-                    splan: pl.StreamPlan, morsel_rows: Optional[int]):
+                    splan: pl.StreamPlan, morsel_rows: Optional[int],
+                    spill: Optional[SpillPlan] = None):
         """Drive the pipeline morsel by morsel.  The cost model priced the
         morsel granularity onto the physical root; the driver double-
         buffers morsel ``i+1``'s placement transfer against morsel ``i``'s
-        compute.  With a placement capacity set, morsels are never cached
-        (out-of-core streaming); without one, placed morsels are reused
-        across executions exactly like whole-column placements."""
+        compute — including host/disk promotion under a spill plan, whose
+        read + H2D both run inside the prefetch thread.  With a placement
+        capacity set, morsels are never cached (out-of-core streaming);
+        without one, placed morsels are reused across executions exactly
+        like whole-column placements."""
         table = splan.base_scan.table
+        cap = self.placement_capacity_bytes
+        n_cols = len(splan.stream_cols)
         # the phys annotation prices the out-of-core posture (H2D per
         # morsel); with no capacity limit morsels are cached across
         # executions, so the spec re-chooses without the transfer term
         target = morsel_rows or (
-            phys.morsel_rows
-            if phys and self.placement_capacity_bytes is not None else None)
-        spec = self.morsel_spec(table, target,
-                                n_cols=len(splan.stream_cols))
+            phys.morsel_rows if phys and cap is not None else None)
+        spec = self.morsel_spec(table, target, n_cols=n_cols,
+                                src_tier=self._spill_src_tier(spill))
+        if morsel_rows is None and cap is not None:
+            # a model-chosen granularity is CLAMPED under the device
+            # budget (the model sized it against the whole table, not the
+            # capacity); an explicit override keeps the strict refusal in
+            # stream_pipeline instead
+            spec = self._clamp_spec(spec, n_cols, cap)
         cp, builds, hit = self.stream_pipeline(node, phys, splan, spec)
-        cache_ok = self.placement_capacity_bytes is None
+        cache_ok = cap is None
         lits = jnp.asarray(L.literals(node), jnp.int32)
+        promote = {"host": [0, 0.0], "disk": [0, 0.0]}
         get = lambda i: self._stream_morsel(table, cp.stream_cols,   # noqa: E731
-                                            spec, i, cache_ok)
+                                            spec, i, cache_ok,
+                                            promote=promote)
         if not self.tel.enabled:
             carry = pl.drive(cp, spec.n_morsels, get, builds, lits,
                              prefetch=self.overlap_transfers)
@@ -741,19 +885,93 @@ class Executor:
             sp.set(measured_s=dt, measured_bytes=moved)
             self.tel.ledger.record_plan(phys, dt, moved, mode="stream",
                                         shards=self.n_shards)
+            self._record_promotions(promote, mode="stream")
             return cp.finalize(carry), hit
 
+    def _clamp_spec(self, spec: MorselSpec, n_cols: int,
+                    cap: int) -> MorselSpec:
+        """Shrink a model-chosen morsel spec until one morsel's placed
+        bytes fit the device budget, floor-aligned to the engine count
+        (``for_plan`` rounds UP, which can push a near-budget target
+        over)."""
+        if spec.rows * BYTES_PER_VALUE * n_cols <= cap:
+            return spec
+        n_eng = self.plans["partitioned"].n_engines
+        rows = max((int(cap) // (BYTES_PER_VALUE * max(n_cols, 1)))
+                   // n_eng * n_eng, n_eng)
+        return MorselSpec(spec.total_rows, rows)
+
+    def _record_promotions(self, promote: Dict[str, list],
+                           *, mode: str) -> None:
+        """Ledger rows for spill-promotion traffic: op="promote" per
+        source tier, measured inside the morsel fetch (prefetch thread),
+        predicted by the model's tier channel — the drift pair the
+        recalibration loop folds back into h2d/disk bandwidth."""
+        for tier, (n_bytes, seconds) in promote.items():
+            if not n_bytes:
+                continue
+            self.tel.ledger.record(
+                op="promote", impl="promote", placement=tier,
+                predicted_bytes=float(n_bytes),
+                predicted_s=self.cost_model.promotion_cost(
+                    float(n_bytes), tier),
+                measured_bytes=float(n_bytes), measured_s=seconds,
+                mode=mode, tier=tier)
+
+    def _run_stream_project(self, node: L.Node, phys: Optional[PhysNode],
+                            pplan: pl.ProjectStreamPlan,
+                            morsel_rows: Optional[int],
+                            spill: Optional[SpillPlan] = None) -> Table:
+        """Project-rooted spilled execution: drive the compiled project
+        step morsel by morsel, compacting each morsel's survivors into a
+        host-side chunk (morsel order = table order, so the concatenated
+        result is bit-identical to the eager materialization — the same
+        reassembly the serving streams' project members do)."""
+        table = pplan.base_scan.table
+        cap = self.placement_capacity_bytes
+        n_cols = len(pplan.stream_cols)
+        spec = self.morsel_spec(table, morsel_rows, n_cols=n_cols,
+                                src_tier=self._spill_src_tier(spill))
+        if morsel_rows is None and cap is not None:
+            spec = self._clamp_spec(spec, n_cols, cap)
+        cpj, builds = self.project_pipeline(node, phys, pplan, spec)
+        lits = jnp.asarray(L.literals(node), jnp.int32)
+        promote = {"host": [0, 0.0], "disk": [0, 0.0]}
+        chunks = []
+        t0 = time.perf_counter()
+        for i in range(spec.n_morsels):
+            arrays, n_valid = self._stream_morsel(
+                table, cpj.stream_cols, spec, i, False, promote=promote)
+            mask, outs = cpj.step(lits, n_valid, *builds, *arrays)
+            live = np.asarray(mask)
+            chunks.append({c: np.asarray(a)[live]
+                           for c, a in zip(cpj.out_cols, outs)})
+        value = Table("proj", {
+            c: Column(jnp.asarray(np.concatenate([ch[c] for ch in chunks])),
+                      c) for c in cpj.out_cols})
+        if self.tel.enabled:
+            dt = time.perf_counter() - t0
+            moved = self.catalog.stats[table].num_rows * BYTES_PER_VALUE \
+                * n_cols + sum(b.nbytes for b in builds)
+            self.tel.ledger.record_plan(phys, dt, moved, mode="stream",
+                                        shards=self.n_shards)
+            self._record_promotions(promote, mode="stream")
+        return value
+
     def morsel_spec(self, table: str, target: Optional[int] = None,
-                    n_cols: int = 2) -> MorselSpec:
+                    n_cols: int = 2, src_tier: str = "host") -> MorselSpec:
         """Morsel granularity for a stream over ``table``: the cost
         model's per-plan choice (or an explicit override), aligned by the
         partitioned channel plan.  ``n_cols`` sizes the per-morsel
-        transfer when the model has to choose."""
+        transfer when the model has to choose; ``src_tier`` prices it at
+        the spill plan's resident tier (disk promotion pushes toward
+        larger morsels than plain H2D)."""
         total = self.catalog.stats[table].num_rows
         if target is None:
             target = self.cost_model.choose_morsel_rows(
                 total, max(n_cols, 1),
-                include_transfer=self.placement_capacity_bytes is not None)
+                include_transfer=self.placement_capacity_bytes is not None,
+                src_tier=src_tier)
         return MorselSpec.for_plan(total, target, self.plans["partitioned"])
 
     def stream_pipeline(self, node: L.Node, phys: Optional[PhysNode],
@@ -773,13 +991,22 @@ class Executor:
             hit = False
         cp, _ = self._compiled[key]
         builds = self._breaker_arrays(splan.breakers)
-        cap = self.placement_capacity_bytes
+        # the strict one-morsel gate holds only under an EXPLICIT
+        # capacity (the caller asked for the hard budget); an env-posture
+        # budget clamps model-chosen specs instead (_clamp_spec) and lets
+        # explicit overrides through
+        cap = self.placement_capacity_bytes if self._cap_explicit else None
         if cap is not None:
             m_bytes = spec.rows * 4 * len(cp.stream_cols)
             if m_bytes > cap:
+                n_eng = self.plans["partitioned"].n_engines
+                fit = max((int(cap) // (4 * len(cp.stream_cols)))
+                          // n_eng * n_eng, n_eng)
                 raise PlacementCapacityError(
-                    f"one morsel ({m_bytes} bytes) exceeds the placement "
-                    f"capacity {cap}: lower morsel_rows")
+                    f"one morsel ({spec.rows} rows x "
+                    f"{len(cp.stream_cols)} cols = {m_bytes} bytes) "
+                    f"exceeds the {int(cap)}-byte placement capacity: "
+                    f"lower morsel_rows to <= {fit}")
         return cp, builds, hit
 
     def project_pipeline(self, node: L.Node, phys: Optional[PhysNode],
@@ -807,20 +1034,19 @@ class Executor:
         return cpj, self._breaker_arrays(pplan.breakers)
 
     def _stream_morsel(self, table: str, cols: Tuple[str, ...],
-                       spec: MorselSpec, i: int, cache_ok: bool):
+                       spec: MorselSpec, i: int, cache_ok: bool,
+                       promote: Optional[Dict[str, list]] = None):
         """One morsel's columns, placed partitioned (each morsel shards one
         slice per pseudo-channel).  ``device_put`` is dispatched here, so
         calling this for morsel ``i+1`` before stepping morsel ``i``
-        overlaps the transfer with compute.  Cached PER COLUMN, so
+        overlaps the transfer with compute — and a host/disk-resident
+        column's numpy/memmap slice (the actual disk read) happens here
+        too, so spill promotion rides the same overlap.  ``promote``
+        accumulates ``tier -> [bytes, seconds]`` for promoted (non-device)
+        columns, measured around the fetch.  Cached PER COLUMN, so
         overlapping column sets (the serving streams' shifting unions)
         share one placement per column slice."""
         start, stop = spec.bounds(i)
-        sh = self.plans["partitioned"].sharding()
-        if self.shard_layout is not None \
-                and spec.rows % self.shard_layout.n_shards == 0:
-            # morsels feed shard_map pipelines: place each slice along
-            # the shard axis so the per-device step reads local bytes
-            sh = self.plans["sharded"].sharding()
         arrays = []
         # ONE cached granularity per table (first comer wins): other
         # sizes bypass the cache instead of pinning a full extra device
@@ -832,18 +1058,64 @@ class Executor:
         missing = [c for c in cols
                    if not (cache_ok
                            and (table, c, spec.rows, i) in self._morsels)]
-        data = self.catalog.tables[table].morsel(spec, i, missing)[0] \
-            if missing else {}
+        tab = self.catalog.tables[table]
+        tiers = {c: tab.columns[c].tier for c in missing}
+        promoted = promote is not None \
+            and any(t != "device" for t in tiers.values())
+        # timing needs a fence, which would serialize the prefetch
+        # overlap — only pay it when telemetry wants the ledger rows
+        timing = promoted and self.tel.enabled
+        t0 = time.perf_counter() if timing else 0.0
+        data = tab.morsel(spec, i, missing)[0] if missing else {}
+        # one pytree device_put for all missing columns: the dispatch
+        # overhead (cost model: stage_overhead_s) is paid once per morsel
+        # instead of once per column.  On a single-device sharding an
+        # uncached morsel skips the explicit put entirely — the jitted
+        # step commits numpy operands on call through the C++ conversion
+        # path, several times cheaper than a python device_put round
+        # trip; cached morsels keep the put so reuse stays transfer-free
+        direct = not cache_ok and len(jax.devices()) == 1
+        if direct or not data:
+            staged = data
+        else:
+            sh = self.plans["partitioned"].sharding()
+            if self.shard_layout is not None \
+                    and spec.rows % self.shard_layout.n_shards == 0:
+                # morsels feed shard_map pipelines: place each slice
+                # along the shard axis so the per-device step reads
+                # local bytes
+                sh = self.plans["sharded"].sharding()
+            staged = dict(zip(data, jax.device_put(list(data.values()),
+                                                   sh)))
         for c in cols:
             key = (table, c, spec.rows, i)
             if c in data:
-                arr = jax.device_put(data[c], sh)
+                arr = staged[c]
                 if cache_ok:
                     self._morsels[key] = arr
             else:
                 arr = self._morsels[key]
             arrays.append(arr)
-        return tuple(arrays), jnp.int32(stop - start)
+        if promoted:
+            if timing:
+                # settle the H2D dispatches so the stamp bounds the full
+                # promotion (read + stage)
+                jax.block_until_ready(arrays)
+            dt = time.perf_counter() - t0 if timing else 0.0
+            moved = {}
+            for c, tier in tiers.items():
+                if tier != "device" and c in data:
+                    n = int(getattr(data[c], "nbytes", 0))
+                    moved[tier] = moved.get(tier, 0) + n
+                    self.metrics.inc(f"exec.promote_bytes.{tier}", n)
+            total = sum(moved.values()) or 1
+            for tier, n in moved.items():
+                acc = promote.setdefault(tier, [0, 0.0])
+                acc[0] += n
+                acc[1] += dt * n / total
+        # np scalar, not jnp: same int32[] signature under jit without a
+        # ~30us per-morsel jax dispatch to build the scalar
+        return tuple(arrays), np.int32(stop - start)
 
     # -- eager path (engine.* operators, BAT-style intermediates) ----------- #
 
@@ -1152,6 +1424,15 @@ class Executor:
             "subsumption_hits": self.subsumption_hits,
             "refine_bytes_streamed": self.refine_bytes_streamed,
             "refine_bytes_avoided": self.refine_bytes_avoided,
+            "spilled_columns": int(
+                self.metrics.value("exec.spilled_columns")),
+            "promote_bytes_host": int(
+                self.metrics.value("exec.promote_bytes.host")),
+            "promote_bytes_disk": int(
+                self.metrics.value("exec.promote_bytes.disk")),
+            "tier_budgets": {"device": self.tier_budgets.device,
+                             "host": self.tier_budgets.host,
+                             "disk": self.tier_budgets.disk},
         }
         if self.cache is not None:
             out.update(self.cache.stats_dict())

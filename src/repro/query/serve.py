@@ -45,6 +45,7 @@ recovers first.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 from typing import Dict, List, Optional, Tuple
@@ -408,7 +409,8 @@ class QueryServer:
                  morsel_rows: Optional[int] = None,
                  semantic_cache=None,
                  policy: Optional[AdaptivePolicy] = None,
-                 backpressure_window: int = 64):
+                 backpressure_window: int = 64,
+                 persist_path: Optional[str] = None):
         self.executor = executor
         # an EXTERNAL SemanticCache shared across several executors (and
         # their servers) over one catalog: installed on this server's
@@ -450,6 +452,47 @@ class QueryServer:
         self._breach_streak = 0
         self.n_recalibrations = 0
         self.n_backpressured = 0
+        # -- warm-start persistence (PR 9) ------------------------------------ #
+        # a snapshot path makes the server RECYCLABLE: construction
+        # replays any existing snapshot (host-tier cache entries +
+        # calibration — stale/corrupt files are rejected by the loader),
+        # and ``save_state()`` writes the current state back atomically.
+        self.persist_path = persist_path
+        self.warm_started: Optional[dict] = None
+        if persist_path and os.path.exists(persist_path) \
+                and self.executor.cache is not None:
+            self.warm_started = self.warm_start(persist_path)
+
+    # -- warm-start persistence --------------------------------------------- #
+
+    def save_state(self, path: Optional[str] = None) -> Optional[dict]:
+        """Snapshot the semantic cache + calibration to ``path`` (default
+        the constructor's ``persist_path``).  Returns the save summary,
+        or None when there is nothing to persist (no cache / no path)."""
+        from repro.query import persist as _persist
+        path = path or self.persist_path
+        ex = self.executor
+        if not path or ex.cache is None:
+            return None
+        return _persist.save_state(
+            path, ex.cache, cost_model=ex.cost_model,
+            table_versions=ex.catalog.versions())
+
+    def warm_start(self, path: str) -> dict:
+        """Replay a snapshot into this server's cache and cost model.
+        Entries land in the cache's host tier (promoted on first touch);
+        entries whose tables drifted since the snapshot are dropped."""
+        from repro.query import persist as _persist
+        ex = self.executor
+        summary = _persist.warm_start(
+            path, ex.cache, cost_model=ex.cost_model,
+            table_versions=ex.catalog.versions())
+        if summary.get("restored") and ex.cache is not None:
+            # the snapshot's entries were admitted against the versions
+            # this catalog holds NOW — seed the drift guard so the next
+            # sync_versions doesn't treat them as unseen
+            ex.cache.sync_versions(ex.catalog.versions())
+        return summary
 
     def _complete_rec(self, rec: QueryRecord,
                       path: Optional[str] = None) -> None:

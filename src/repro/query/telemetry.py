@@ -268,6 +268,9 @@ class LedgerRow:
                                      # (-1 = not shard-attributed)
     table: str = ""                  # (table, column) a filter row's bytes
     column: str = ""                 # belong to — selectivity feedback key
+    tier: str = "device"             # memory tier the bytes streamed FROM
+                                     # (op="promote" rows: the source tier
+                                     # of a spill promotion)
 
     @property
     def drift_bytes(self) -> float:
@@ -308,13 +311,14 @@ class BandwidthLedger:
                predicted_bytes: float, predicted_s: float,
                measured_bytes: float, measured_s: float,
                mode: str = "eager", attributed: bool = False,
-               shard: int = -1, table: str = "", column: str = "") -> None:
+               shard: int = -1, table: str = "", column: str = "",
+               tier: str = "device") -> None:
         if not self.enabled:
             return
         row = LedgerRow(op, impl, placement, float(predicted_bytes),
                         float(predicted_s), float(measured_bytes),
                         float(measured_s), mode, attributed, shard,
-                        table, column)
+                        table, column, tier=tier)
         with self._lock:
             if len(self.rows) >= self.max_rows:
                 self.dropped += 1
@@ -428,6 +432,26 @@ class BandwidthLedger:
                 if a["predicted_bytes"] else 0.0
         return agg, nxt
 
+    def bytes_by_tier(self, *, start: int = 0) -> Dict[str, dict]:
+        """Measured bytes attributed per memory tier — the spill-traffic
+        view: tier -> {bytes, seconds, n, gbps}.  Promotion rows
+        (op="promote") carry their SOURCE tier, so "host"/"disk" totals
+        here are exactly the bytes the streaming pipelines pulled up the
+        hierarchy; "device" is everything that streamed in place."""
+        with self._lock:
+            rows = self.rows[start:]
+        agg: Dict[str, dict] = {}
+        for r in rows:
+            a = agg.setdefault(r.tier, {"bytes": 0.0, "seconds": 0.0,
+                                        "n": 0})
+            a["bytes"] += r.measured_bytes
+            a["seconds"] += r.measured_s
+            a["n"] += 1
+        for a in agg.values():
+            a["gbps"] = a["bytes"] / a["seconds"] / 1e9 \
+                if a["seconds"] else 0.0
+        return agg
+
     def selectivity_corrections(self, *, start: int = 0, min_rows: int = 1
                                 ) -> Dict[Tuple[str, str], float]:
         """Per-(table, column) measured-over-predicted BYTES ratio across
@@ -471,10 +495,21 @@ class BandwidthLedger:
         ``model.apply_calibration(ledger.calibration_overlay(model))``.
         """
         by_impl: Dict[str, dict] = {}
+        by_tier: Dict[str, dict] = {}
         with self._lock:
             rows = self.rows[start:]
         for r in rows:
             if r.measured_s <= 0 or r.measured_bytes <= 0:
+                continue
+            if r.op == "promote":
+                # spill-promotion traffic calibrates the TIER channels,
+                # not a backend's stream efficiency: achieved promotion
+                # bandwidth from the source tier feeds the h2d/disk
+                # overlay keys below, so drift-triggered recost converges
+                # on what the hierarchy actually delivers
+                t = by_tier.setdefault(r.tier, {"bytes": 0.0, "s": 0.0})
+                t["bytes"] += r.measured_bytes
+                t["s"] += r.measured_s
                 continue
             a = by_impl.setdefault(r.impl, {"bw_seconds": 0.0,
                                             "measured_s": 0.0,
@@ -505,7 +540,16 @@ class BandwidthLedger:
                 "stream_eff": round(min(max(eff, 1e-6), 1.0), 6),
                 "call_overhead_s": base_over.get(impl, 2e-6),
             }
-        return {"backend": "ledger", "backends": backends}
+        overlay = {"backend": "ledger", "backends": backends}
+        # host promotions measure the H2D staging link end to end; disk
+        # promotions are read+stage in series, dominated by (and reported
+        # as) the disk channel
+        tier_keys = {"host": "h2d_gbps", "disk": "disk_gbps"}
+        for tier, t in by_tier.items():
+            key = tier_keys.get(tier)
+            if key and t["s"] > 0:
+                overlay[key] = round(t["bytes"] / t["s"] / 1e9, 4)
+        return overlay
 
     def report(self) -> str:
         """Human-readable drift report."""

@@ -1,0 +1,138 @@
+"""Shared-cache concurrency stress (S3).
+
+The SemanticCache is shared across executors and server threads: puts,
+subsumption lookups, invalidations, and (since PR 9) demotions all race
+on one RLock.  These tests hammer that lock from several threads and
+then reconcile — the interval index must hold exactly the resident
+bitmap entries, byte books must equal resident sums per tier, and no
+lookup may ever observe a half-applied invalidation (an entry-less
+index key or a dropped entry still serving).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.query import SemanticCache
+
+N_THREADS = 4
+N_OPS = 300
+
+
+def _stress(cache, n_tables=3, seed=0):
+    """Each worker cycles puts / superset lookups / invalidations over a
+    small table set — maximal index contention."""
+    stop = threading.Barrier(N_THREADS)
+    errors = []
+
+    def worker(wid):
+        rng = np.random.default_rng(seed + wid)
+        stop.wait()
+        try:
+            for i in range(N_OPS):
+                t = f"t{rng.integers(n_tables)}"
+                lo = int(rng.integers(0, 50))
+                hi = lo + int(rng.integers(1, 50))
+                op = i % 3
+                if op == 0:
+                    key = ("bitmap", t, 0, "v", lo, hi, wid, i)
+                    cache.put(key, np.arange(8), kind="bitmap",
+                              n_bytes=int(rng.integers(16, 256)),
+                              recompute_s=float(rng.random() + 0.01),
+                              tables=(t,),
+                              interval=(t, "v", 0, lo, hi))
+                elif op == 1:
+                    found = cache.lookup_superset(
+                        t, "v", 0, lo + 5, max(lo + 5, hi - 5))
+                    if found is not None:
+                        entry, (clo, chi) = found
+                        # the returned superset must actually contain
+                        # the request and still be resident
+                        assert clo <= lo + 5 and chi >= max(lo + 5,
+                                                            hi - 5)
+                        assert entry.n_bytes >= 0
+                else:
+                    cache.invalidate_table(t)
+        except Exception as exc:                     # pragma: no cover
+            errors.append((wid, exc))
+
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(N_THREADS)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    return errors
+
+
+def _reconcile(cache):
+    """Post-race exact reconciliation of index and byte books."""
+    with cache._lock:
+        cache.check_invariants()
+        resident_bitmaps = {e.key for e in cache._entries.values()
+                            if e.interval is not None}
+        indexed = {k for bucket in cache._intervals.values()
+                   for k in bucket}
+        assert indexed == resident_bitmaps, (
+            f"interval index drift: indexed-not-resident="
+            f"{indexed - resident_bitmaps} resident-not-indexed="
+            f"{resident_bitmaps - indexed}")
+
+
+def test_concurrent_invalidate_vs_put_and_lookup():
+    cache = SemanticCache(1 << 20)
+    errors = _stress(cache)
+    assert not errors, errors
+    _reconcile(cache)
+    # the index still works after the race
+    cache.put(("bitmap", "t0", 0, "v", 0, 99), np.arange(4),
+              kind="bitmap", n_bytes=16, recompute_s=1.0,
+              tables=("t0",), interval=("t0", "v", 0, 0, 99))
+    assert cache.lookup_superset("t0", "v", 0, 10, 20) is not None
+
+
+def test_concurrent_stress_with_demotion_tier():
+    """Same race with a tiny device budget + host tier: every admission
+    fights, demotions interleave with invalidations, books must still
+    reconcile exactly."""
+    cache = SemanticCache(2048, host_budget_bytes=4096)
+    errors = _stress(cache, seed=7)
+    assert not errors, errors
+    _reconcile(cache)
+    st = cache.stats_dict()
+    assert st["semantic_cache_used_bytes"] <= 2048
+    assert st["semantic_cache_host_used_bytes"] <= 4096
+
+
+def test_concurrent_clear_vs_put():
+    cache = SemanticCache(1 << 16)
+    stop = threading.Barrier(2)
+    errors = []
+
+    def putter():
+        stop.wait()
+        try:
+            for i in range(N_OPS):
+                cache.put(("bitmap", "t", 0, "v", i, i + 10),
+                          np.arange(4), kind="bitmap", n_bytes=16,
+                          recompute_s=0.5, tables=("t",),
+                          interval=("t", "v", 0, i, i + 10))
+        except Exception as exc:                     # pragma: no cover
+            errors.append(exc)
+
+    def clearer():
+        stop.wait()
+        try:
+            for _ in range(N_OPS // 10):
+                cache.clear()
+        except Exception as exc:                     # pragma: no cover
+            errors.append(exc)
+
+    threads = [threading.Thread(target=putter),
+               threading.Thread(target=clearer)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errors, errors
+    _reconcile(cache)

@@ -137,16 +137,22 @@ def test_duplicate_build_mean_and_build_column_aggregate(rng):
 
 def test_larger_than_placement_completes_only_streamed(rng):
     """Acceptance: with a placement capacity below the probe column size
-    the eager/fused paths refuse; morsel streaming completes and agrees
-    with the unconstrained result."""
+    the naive/forced-eager paths refuse; the optimized batch path spills
+    through the tier hierarchy, and morsel streaming completes — both
+    agreeing with the unconstrained result."""
     cat, big, small, _ = _make_catalog(rng)
     q = (Q.scan("big").join(Q.scan("small"), on="k")
           .filter("v", 10, 60).sum("w"))
     want = Executor(cat).execute(q).value
     cap = big.column("k").nbytes // 4
     ex = Executor(cat, placement_capacity_bytes=cap)
-    with pytest.raises(PlacementCapacityError):
-        ex.execute(q)
+    # the optimized batch path no longer refuses: it reroutes through a
+    # cost-priced spill plan (host tier here) and streams, bit-identical
+    spilled = ex.execute(q)
+    assert int(spilled.value) == int(want)
+    assert spilled.mode == "stream"
+    assert any(cat.tables["big"].column_tier(c) != "device"
+               for c in ("k", "v", "w"))
     with pytest.raises(PlacementCapacityError):
         ex.execute(q, optimized=False)
     got = ex.execute(q, mode="stream", morsel_rows=cap // (4 * 3)).value

@@ -1,0 +1,409 @@
+"""Tiered placement suite (PR 9).
+
+Pins the device <-> host <-> disk hierarchy end to end: the spill
+planner's greedy cost-priced tier assignment, the executor's batch-mode
+spill reroute (bit-identical to the unconstrained oracle, aggregate and
+Project roots, host and disk tiers), the hard overflow error when not
+even disk can hold the working set, tier-priced promotion/demotion
+monotonicity in the cost model, the semantic cache's demote-instead-of-
+evict host tier (S2 reconciliation included), and the warm-start
+persistence layer's staleness/corruption rejection.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.columnar.table import Column, Table
+from repro.query import (
+    Catalog, CostModel, Executor, PlacementCapacityError, Q, QueryServer,
+    SemanticCache, SpillPlan, TierBudgets, plan_spill,
+)
+from repro.query import persist
+from repro.query.cost import TIERS
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xA11)
+
+
+def _make_catalog(r, n=4096):
+    big = Table.from_arrays("big", {
+        "k": r.integers(0, 1000, size=n).astype(np.int32),
+        "v": r.integers(0, 100, size=n).astype(np.int32),
+        "w": r.integers(1, 50, size=n).astype(np.int32)})
+    small = Table.from_arrays("small", {
+        "k": np.asarray(r.choice(1000, size=512, replace=False),
+                        np.int32)})
+    return Catalog.from_tables(big, small), big, small
+
+
+def _fresh_oracle(cat):
+    """An unconstrained catalog over copies of the SAME data (fresh
+    device-resident tables) for oracle runs."""
+    return Catalog.from_tables(*[
+        Table.from_arrays(t.name, {c: np.asarray(col.data)
+                                   for c, col in t.columns.items()})
+        for t in cat.tables.values()])
+
+
+# --------------------------------------------------------------------------- #
+# spill planner units
+
+def test_plan_spill_fills_tiers_in_order():
+    model = CostModel(1)
+    cols = [(("t", "a"), 100), (("t", "b"), 100), (("t", "c"), 100)]
+    plan = plan_spill(cols, TierBudgets(device=100, host=100, disk=None),
+                      model)
+    assert sorted(plan.tiers.values()) == ["device", "disk", "host"]
+    assert plan.overflow_bytes == 0
+    assert plan.spilled
+    assert plan.promote_s_per_exec > 0
+
+
+def test_plan_spill_unbounded_stays_on_device():
+    plan = plan_spill([(("t", "a"), 1 << 30)], TierBudgets(), CostModel(1))
+    assert plan.tiers == {("t", "a"): "device"}
+    assert not plan.spilled
+    assert plan.promote_s_per_exec == 0.0
+
+
+def test_plan_spill_heat_wins_device_residency():
+    model = CostModel(1)
+    cols = [(("t", "cold"), 100), (("t", "hot"), 100)]
+    plan = plan_spill(cols, TierBudgets(device=100, host=None), model,
+                      heat={("t", "hot"): 5.0})
+    assert plan.tier_of(("t", "hot")) == "device"
+    assert plan.tier_of(("t", "cold")) == "host"
+
+
+def test_plan_spill_reserved_device_carves_budget():
+    model = CostModel(1)
+    plan = plan_spill([(("t", "a"), 80)], TierBudgets(device=100),
+                      model, reserved_device=50)
+    assert plan.tier_of(("t", "a")) == "host"
+
+
+def test_plan_spill_overflow_is_reported():
+    plan = plan_spill([(("t", "a"), 100)],
+                      TierBudgets(device=10, host=10, disk=10),
+                      CostModel(1))
+    assert plan.overflow_bytes == 100
+    assert "OVERFLOW" in plan.describe()
+
+
+# --------------------------------------------------------------------------- #
+# cost-model tier pricing
+
+def test_tier_pricing_monotone_down_the_hierarchy():
+    model = CostModel(1)
+    n = float(1 << 20)
+    assert model.promotion_cost(n, "device") == 0.0
+    assert 0 < model.promotion_cost(n, "host") \
+        < model.promotion_cost(n, "disk")
+    assert model.demotion_cost(n, "host") \
+        <= model.demotion_cost(n, "disk")
+    # a tier_score never exceeds the plain cache_score (promotion is a
+    # deduction, floored at zero), and decays down the hierarchy
+    s = [model.tier_score(1e-3, n, tier=t) for t in TIERS]
+    assert s[0] == model.cache_score(1e-3, n)
+    assert s[0] >= s[1] >= s[2] >= 0.0
+
+
+def test_morsel_cost_src_tier_default_matches_h2d():
+    model = CostModel(1)
+    base = model.morsel_cost(1 << 16, 4096, 3, impl="xla")
+    assert model.morsel_cost(1 << 16, 4096, 3, impl="xla",
+                             src_tier="host") == base
+    assert model.morsel_cost(1 << 16, 4096, 3, impl="xla",
+                             src_tier="disk") > base
+
+
+# --------------------------------------------------------------------------- #
+# executor spill reroute (differential vs unconstrained oracle)
+
+def test_spilled_batch_agg_bit_identical_host_tier(rng):
+    cat, big, _ = _make_catalog(rng)
+    q = (Q.scan("big").join(Q.scan("small"), on="k")
+          .filter("v", 10, 60).sum("w"))
+    want = Executor(_fresh_oracle(cat)).execute(q).value
+    ex = Executor(cat, placement_capacity_bytes=big.column("k").nbytes // 4)
+    got = ex.execute(q)
+    assert int(got.value) == int(want)
+    assert got.mode == "stream"
+    st = ex.stats_dict()
+    assert st["spilled_columns"] > 0
+    assert st["promote_bytes_host"] > 0
+
+
+def test_spilled_batch_agg_bit_identical_disk_tier(rng, tmp_path):
+    os.environ["REPRO_SPILL_DIR"] = str(tmp_path)
+    try:
+        cat, big, _ = _make_catalog(rng)
+        q = Q.scan("big").filter("v", 10, 60).sum("k")
+        want = Executor(_fresh_oracle(cat)).execute(q).value
+        ex = Executor(cat, tier_budgets=TierBudgets(
+            device=2048, host=0, disk=None))
+        got = ex.execute(q)
+        assert int(got.value) == int(want)
+        assert {cat.tables["big"].column_tier(c)
+                for c in ("k", "v")} == {"disk"}
+        assert ex.stats_dict()["promote_bytes_disk"] > 0
+        # the spill files landed under the configured dir
+        assert any(f.endswith(".npy") for f in os.listdir(tmp_path))
+    finally:
+        del os.environ["REPRO_SPILL_DIR"]
+
+
+def test_spilled_project_root_bit_identical(rng):
+    cat, big, _ = _make_catalog(rng)
+    q = Q.scan("big").filter("v", 10, 60).project("k", "w")
+    oracle = Executor(_fresh_oracle(cat)).execute(q).value
+    ex = Executor(cat, placement_capacity_bytes=big.column("k").nbytes // 4)
+    got = ex.execute(q)
+    assert got.mode == "stream"
+    assert got.value.num_rows == oracle.num_rows
+    for c in ("k", "w"):
+        np.testing.assert_array_equal(np.asarray(got.value.column(c)),
+                                      np.asarray(oracle.column(c)))
+
+
+def test_spill_survives_repeat_and_mutation(rng):
+    """Spilled columns stay usable across executions, and a mutation
+    (version bump) still invalidates caches exactly as on-device."""
+    cat, big, _ = _make_catalog(rng)
+    q = Q.scan("big").filter("v", 10, 60).sum("w")
+    ex = Executor(cat, placement_capacity_bytes=big.column("k").nbytes // 4)
+    first = int(ex.execute(q).value)
+    assert int(ex.execute(q).value) == first
+    tab = cat.tables["big"]
+    w2 = (np.asarray(tab.column("w")) + 1).astype(np.int32)
+    cat.update_column("big", "w", w2)
+    want = Executor(Catalog.from_tables(
+        Table.from_arrays("big", {
+            "k": np.asarray(tab.column("k")),
+            "v": np.asarray(tab.column("v")),
+            "w": w2}))).execute(Q.scan("big").filter("v", 10, 60)
+                                .sum("w")).value
+    assert int(ex.execute(q).value) == int(want) != first
+
+
+def test_overflow_of_whole_hierarchy_raises(rng):
+    cat, big, _ = _make_catalog(rng)
+    q = Q.scan("big").filter("v", 10, 60).sum("k")
+    ex = Executor(cat, tier_budgets=TierBudgets(device=2048, host=0,
+                                                disk=0))
+    with pytest.raises(PlacementCapacityError) as ei:
+        ex.execute(q)
+    assert "overflows the whole tier hierarchy" in str(ei.value)
+
+
+def test_capacity_error_reports_bytes_budget_and_remedy(rng):
+    """S1: the refusal must say how big, how small the budget, and what
+    to do about it."""
+    cat, big, _ = _make_catalog(rng)
+    q = Q.scan("big").filter("v", 10, 60).sum("k")
+    cap = 1024
+    ex = Executor(cat, placement_capacity_bytes=cap)
+    with pytest.raises(PlacementCapacityError) as ei:
+        ex.execute(q, optimized=False)
+    msg = str(ei.value)
+    assert str(cap) in msg                        # the budget
+    assert str(big.column("k").nbytes) in msg     # actual working set
+    assert 'mode="stream"' in msg and "morsel_rows" in msg
+
+
+def test_env_cap_posture_spills_without_hard_gates(rng, monkeypatch):
+    """REPRO_PLACEMENT_CAP is a posture, not a gate: batch queries spill
+    and complete, eager/naive paths stay callable (the tiered CI leg
+    runs the whole suite this way)."""
+    monkeypatch.setenv("REPRO_PLACEMENT_CAP", "4096")
+    cat, big, _ = _make_catalog(rng)
+    q = Q.scan("big").filter("v", 10, 60).sum("k")
+    want = Executor(_fresh_oracle(cat)).execute(q).value
+    ex = Executor(cat)
+    assert ex.placement_capacity_bytes == 4096
+    assert int(ex.execute(q).value) == int(want)
+    assert int(ex.execute(q, optimized=False).value) == int(want)
+    assert int(ex.execute(q, mode="eager").value) == int(want)
+
+
+# --------------------------------------------------------------------------- #
+# semantic cache: demote-instead-of-evict
+
+def test_cache_demotes_then_serves_and_promotes():
+    c = SemanticCache(1000, host_budget_bytes=4000)
+    c.put("a", np.arange(100), kind="result", n_bytes=600,
+          recompute_s=1.0)
+    c.put("b", np.arange(100), kind="result", n_bytes=600,
+          recompute_s=5.0)
+    assert c.peek("a").tier == "host" and c.peek("b").tier == "device"
+    st = c.stats_dict()
+    assert st["semantic_cache_demoted"] == 1
+    assert st["semantic_cache_evicted"] == 0
+    # the demoted entry still HITS
+    assert c.get("a") is not None
+    # freeing device room lets the next host hit promote back
+    c.invalidate_table("nope")          # no-op, exercises reconciliation
+    c.put("b2", 1, kind="result", n_bytes=1, recompute_s=9.0)
+    with c._lock:
+        c._drop(c.peek("b"))
+    assert c.get("a").tier == "device"
+    assert c.stats_dict()["semantic_cache_promoted"] == 1
+
+
+def test_demote_beats_evict_only_hit_rate():
+    """Acceptance (c): same device budget, the demoting cache strictly
+    wins hit rate over evict-only under a thrashing key cycle (the host
+    tier is otherwise-free DRAM — demotion preserves hits the evict-only
+    cache loses to device pressure)."""
+    device = 1000
+
+    def run(cache):
+        # three 800-byte entries of ascending value cycle through a
+        # 1000-byte device tier: evict-only thrashes (only the best
+        # survives), demotion keeps the displaced two hittable on host
+        for _ in range(5):
+            for i, k in enumerate(("k0", "k1", "k2")):
+                if cache.get(k) is None:
+                    cache.put(k, np.arange(200), kind="result",
+                              n_bytes=800, recompute_s=float(i + 1))
+        st = cache.stats_dict()
+        return st["semantic_cache_hit_rate"]
+
+    evict_only = run(SemanticCache(device))
+    demoting = run(SemanticCache(device, host_budget_bytes=3 * device))
+    assert demoting > evict_only
+
+
+def test_tenant_share_reconciles_after_invalidate():
+    """S2: per-tenant byte books equal exact per-tier sums over resident
+    entries after a mixed put/demote/invalidate history (stats_dict
+    asserts check_invariants on every call)."""
+    c = SemanticCache(2000, host_budget_bytes=4000)
+    c.set_tenant_shares({"a": 1.0, "b": 1.0})
+    c.put("r1", 1, kind="result", n_bytes=900, recompute_s=1.0,
+          tables=("t1",), tenant="a")
+    c.put("r2", 2, kind="result", n_bytes=900, recompute_s=2.0,
+          tables=("t2",), tenant="b")
+    c.put("r3", 3, kind="result", n_bytes=900, recompute_s=3.0,
+          tables=("t1",), tenant="a")    # displaces r1 -> host
+    st = c.stats_dict()
+    resident = {"device": 0, "host": 0}
+    with c._lock:
+        for e in c._entries.values():
+            resident[e.tier] += e.n_bytes
+    assert st["semantic_cache_used_bytes"] == resident["device"]
+    assert st["semantic_cache_host_used_bytes"] == resident["host"]
+    c.invalidate_table("t1")
+    st = c.stats_dict()                  # invariant assert runs here
+    assert "a" not in st["semantic_cache_tenant_bytes"]
+    assert "a" not in st["semantic_cache_tenant_bytes_host"]
+    assert st["semantic_cache_tenant_bytes"] == {"b": 900}
+    c.check_invariants()
+
+
+def test_host_budget_zero_is_exact_legacy():
+    c = SemanticCache(1000)
+    c.put("a", 1, kind="result", n_bytes=600, recompute_s=1.0)
+    c.put("b", 2, kind="result", n_bytes=600, recompute_s=5.0)
+    assert "a" not in c and "b" in c
+    st = c.stats_dict()
+    assert st["semantic_cache_evicted"] == 1
+    assert st["semantic_cache_demoted"] == 0
+    assert st["semantic_cache_host_used_bytes"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# persistence: snapshot / warm start
+
+def _snapshot_cache():
+    c = SemanticCache(1 << 20, host_budget_bytes=1 << 20)
+    c.put(("result", "fp-1"), np.float32(41.5), kind="result",
+          n_bytes=4, recompute_s=2.0, tables=("t1",))
+    c.put(("bitmap", "t1", 0, "v", 1, 5), np.arange(9), kind="bitmap",
+          n_bytes=36, recompute_s=1.0, tables=("t1",),
+          interval=("t1", "v", 0, 1, 5))
+    c.put(("result", "fp-tab"),
+          Table.from_arrays("proj", {"x": np.arange(6, dtype=np.int32)}),
+          kind="result", n_bytes=24, recompute_s=3.0, tables=("t2",))
+    return c
+
+
+def test_persist_roundtrip_restores_into_host_tier(tmp_path):
+    path = str(tmp_path / "snap.npz")
+    model = CostModel(1)
+    model.apply_calibration({"backend": "test", "backends": {},
+                             "h2d_gbps": 7.5})
+    summary = persist.save_state(path, _snapshot_cache(),
+                                 cost_model=model,
+                                 table_versions={"t1": 0, "t2": 0})
+    assert summary["saved"] == 3
+    c2 = SemanticCache(1 << 20, host_budget_bytes=1 << 20)
+    m2 = CostModel(1)
+    r = persist.warm_start(path, c2, cost_model=m2,
+                           table_versions={"t1": 0, "t2": 0})
+    assert r["restored"] == 3 and r["calibrated"]
+    assert m2.h2d_gbps == 7.5
+    assert all(e.tier == "host" for e in c2._entries.values())
+    assert float(c2.get(("result", "fp-1")).value) == pytest.approx(41.5)
+    # the subsumption index was rebuilt: a narrower interval hits
+    assert c2.lookup_superset("t1", "v", 0, 2, 4) is not None
+    tab = c2.peek(("result", "fp-tab")).value
+    np.testing.assert_array_equal(np.asarray(tab.column("x")),
+                                  np.arange(6, dtype=np.int32))
+    c2.stats_dict()
+
+
+def test_persist_rejects_stale_table_versions(tmp_path):
+    path = str(tmp_path / "snap.npz")
+    persist.save_state(path, _snapshot_cache(),
+                       table_versions={"t1": 0, "t2": 0})
+    c2 = SemanticCache(1 << 20, host_budget_bytes=1 << 20)
+    r = persist.warm_start(path, c2, table_versions={"t1": 3, "t2": 0})
+    assert r["restored"] == 1            # only the t2-dependent result
+    assert r["stale"] == 2
+    assert c2.peek(("result", "fp-1")) is None
+
+
+def test_persist_rejects_corrupt_and_wrong_format(tmp_path):
+    bad = tmp_path / "bad.npz"
+    bad.write_bytes(b"not an archive")
+    assert persist.load_state(str(bad)) is None
+    # a valid npz with a mismatched format version is rejected whole
+    import json
+    path = str(tmp_path / "v999.npz")
+    manifest = json.dumps({"format": 999, "entries": []}).encode()
+    np.savez(path, manifest=np.frombuffer(manifest, dtype=np.uint8))
+    assert persist.load_state(path) is None
+    r = persist.warm_start(str(bad), SemanticCache(1000))
+    assert r == {"restored": 0, "stale": 0, "calibrated": False,
+                 "loaded": False}
+
+
+def test_query_server_warm_start_roundtrip(rng, tmp_path):
+    """End to end: serve a workload, snapshot, restart the server on a
+    fresh cache, and the replayed queries hit instead of recompute."""
+    if os.environ.get("REPRO_CACHE", "1").lower() in ("0", "off", "no"):
+        pytest.skip("semantic cache disabled")
+    path = str(tmp_path / "server.npz")
+    cat, big, _ = _make_catalog(rng)
+    q = Q.scan("big").filter("v", 10, 60).sum("w")
+    srv = QueryServer(Executor(cat), persist_path=path,
+                      semantic_cache=SemanticCache(
+                          1 << 20, host_budget_bytes=1 << 20))
+    srv.submit(q)
+    srv.drain()
+    want = int(srv.history[-1].result)
+    assert srv.save_state()["saved"] >= 1
+    # "restart": same catalog (same versions), fresh executor + cache
+    srv2 = QueryServer(Executor(cat), persist_path=path,
+                       semantic_cache=SemanticCache(
+                           1 << 20, host_budget_bytes=1 << 20))
+    assert srv2.warm_started is not None
+    assert srv2.warm_started["restored"] >= 1
+    srv2.submit(q)
+    srv2.drain()
+    assert int(srv2.history[-1].result) == want
+    assert srv2.executor.cache.hits >= 1
