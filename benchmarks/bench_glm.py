@@ -1,0 +1,219 @@
+"""In-engine GLM benchmark (paper §VI, workload 3) -> BENCH_glm.json.
+
+Measures (and HARD-GATES) the three acceptance points of the TrainGLM /
+ScoreGLM path:
+
+  * **streamed vs eager training** — the morsel-streamed epoch loop
+    against the whole-column eager lowering on the same dataset.
+    Gate (a): bit-identical weights, streamed within 3x of eager (the
+    stream pays per-morsel dispatch; it buys out-of-core capacity, not
+    raw speed at in-memory sizes).
+  * **warm-model serving** — a train-then-score dashboard served twice:
+    cold (every score retrains, no cache) vs warm (scores resolve the
+    cached model by fingerprint).  Gate (b): warm score p50 >= 5x lower
+    than cold train-per-query p50.
+  * **sharded replication trade (Fig. 10a)** — a child process under 8
+    forced host devices prices and runs the sharded trainer.  Gate (c):
+    the shard/replicated alternative is priced, the chosen plan's
+    weights are bit-identical to the 1-device oracle, and pricing ranks
+    replicated below the congested (single remote copy) baseline.
+
+    PYTHONPATH=src python benchmarks/bench_glm.py [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FEATS = ("f0", "f1", "f2", "f3")
+N_SCORES = 8
+
+
+def _timeit(fn, iters: int = 3, repeats: int = 3) -> float:
+    fn()                               # warmup (compile)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best * 1e3                                    # ms
+
+
+def _percentile(vals, q):
+    s = sorted(vals)
+    if not s:
+        return 0.0
+    return s[int(q * (len(s) - 1))]
+
+
+def _make_catalog(n_rows: int):
+    import numpy as np
+    from repro.query import Catalog
+    from repro.columnar.table import Table
+    rng = np.random.default_rng(7)
+    a = rng.normal(size=(n_rows, len(FEATS))).astype(np.float32)
+    w = rng.normal(size=(len(FEATS),)).astype(np.float32)
+    y = (1.0 / (1.0 + np.exp(-(a @ w))) > 0.5).astype(np.float32)
+    cols = {f: a[:, i] for i, f in enumerate(FEATS)}
+    cols["y"] = y
+    cols["k"] = np.arange(n_rows, dtype=np.int32)
+    return Catalog.from_tables(Table.from_arrays("glm", cols))
+
+
+def _train_q(epochs: int = 3):
+    """Hyper-parameter search over an N_SCORES-wide grid: the dashboard
+    below scores each grid entry once, so every score is a distinct
+    fingerprint that only the cached MODEL (not the result cache) can
+    serve."""
+    from repro.core.sgd_glm import HyperParams
+    from repro.query import Q
+    grid = [HyperParams(0.1 / (i + 1), 0.001 * i) for i in range(N_SCORES)]
+    return Q.scan("glm").train_glm(list(FEATS), "y", grid, epochs=epochs)
+
+
+def _sharded_child(n_rows: int) -> dict:
+    """Runs in a subprocess under 8 forced host devices: price + run
+    the sharded trainer against the 1-device oracle."""
+    import numpy as np
+    from repro.query import Executor
+    q = _train_q(epochs=2)
+    oracle = Executor(_make_catalog(n_rows)) \
+        .execute(q, optimized=False).value
+    ex = Executor(_make_catalog(n_rows), shards=8)
+    _, phys = ex.plan(q.node)
+    alts = dict(phys.alternatives)
+    got = ex.execute(q)
+    identical = bool(np.array_equal(np.asarray(got.value[0]),
+                                    np.asarray(oracle[0])))
+    return {
+        "alternatives": {k: v for k, v in alts.items()},
+        "has_shard_alt": "shard/replicated" in alts,
+        "replicated_below_congested":
+            alts.get("shard/replicated", float("inf"))
+            < alts.get("xla/congested", float("inf")),
+        "identical_to_oracle": identical,
+        "chosen": f"{phys.impl}/{phys.placement}",
+    }
+
+
+def main(out_path: str = "BENCH_glm.json", *, n_rows: int = 1 << 16,
+         smoke: bool = False) -> dict:
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    import numpy as np
+    from repro.query import Executor, Q, QueryServer, SemanticCache
+
+    if smoke:
+        n_rows = 1 << 13
+    report: dict = {"n_rows": n_rows, "smoke": smoke}
+    q = _train_q()
+
+    # --- gate (a): streamed vs eager, bit-identical -------------------------
+    ex = Executor(_make_catalog(n_rows))
+    streamed = ex.execute(q)
+    eager = ex.execute(q, mode="eager")
+    identical = bool(np.array_equal(np.asarray(streamed.value[0]),
+                                    np.asarray(eager.value[0])))
+    stream_ms = _timeit(lambda: ex.execute(q).value)
+    eager_ms = _timeit(lambda: ex.execute(q, mode="eager").value)
+    gate_a = {
+        "identical": identical,
+        "streamed_ms": round(stream_ms, 2),
+        "eager_ms": round(eager_ms, 2),
+        "streamed_vs_eager_x": round(stream_ms / max(eager_ms, 1e-9), 2),
+        "morsel_rows": streamed.physical.morsel_rows,
+        "pass": identical
+        and stream_ms <= 3.0 * max(eager_ms, 1e-9),
+    }
+    report["gate_a_streamed_vs_eager"] = gate_a
+    assert gate_a["pass"], gate_a
+
+    # --- gate (b): warm-model serving vs cold train-per-query ---------------
+    def dashboard(server):
+        """One train + one score per grid entry.  Every score is a
+        distinct plan (``select`` differs), so the result cache never
+        serves one for another — only the cached MODEL is reusable.
+        Cold (no cache) retrains per score; warm resolves the weights by
+        fingerprint and pays just the scan + matmul."""
+        lats = []
+        server.submit(q)
+        server.drain()
+        for i in range(N_SCORES):
+            server.submit(Q.scan("glm").score_glm(q, select=i))
+            server.drain()
+            lats.append(server.history[-1].latency_s)
+        return _percentile(lats, 0.5) * 1e3
+
+    cold_srv = QueryServer(Executor(_make_catalog(n_rows)))
+    cold_p50 = dashboard(cold_srv)             # no cache: retrain each score
+    warm_ex = Executor(_make_catalog(n_rows),
+                       semantic_cache=SemanticCache(64 << 20))
+    warm_srv = QueryServer(warm_ex)
+    warm_p50 = dashboard(warm_srv)
+    speedup = cold_p50 / max(warm_p50, 1e-9)
+    gate_b = {
+        "cold_train_per_query_p50_ms": round(cold_p50, 3),
+        "warm_model_p50_ms": round(warm_p50, 3),
+        "model_hits": warm_ex.model_hits,
+        "speedup_x": round(speedup, 2),
+        "pass": speedup >= 5.0 and warm_ex.model_hits >= N_SCORES - 1,
+    }
+    report["gate_b_warm_model_serving"] = gate_b
+    assert gate_b["pass"], gate_b
+
+    # --- gate (c): sharded replication trade (child process) ----------------
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_ROOT, "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8"
+                        ).strip()
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--sharded-child",
+         str(min(n_rows, 1 << 13))],
+        capture_output=True, text=True, env=env, cwd=_ROOT, check=True)
+    child = json.loads(out.stdout.strip().splitlines()[-1])
+    gate_c = dict(child)
+    gate_c["pass"] = child["has_shard_alt"] \
+        and child["replicated_below_congested"] \
+        and child["identical_to_oracle"]
+    report["gate_c_sharded_replication"] = gate_c
+    assert gate_c["pass"], gate_c
+
+    with open(os.path.join(_ROOT, out_path), "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+    return report
+
+
+def glm_smoke():
+    """run.py --smoke entry: hard-gates all three acceptance points at
+    smoke scale; rows feed the CSV like every other figure."""
+    r = main(smoke=True)
+    ga = r["gate_a_streamed_vs_eager"]
+    gb = r["gate_b_warm_model_serving"]
+    gc = r["gate_c_sharded_replication"]
+    return [
+        ("glm_streamed_train", ga["streamed_ms"] * 1e3,
+         f"vs_eager={ga['streamed_vs_eager_x']}x identical="
+         f"{ga['identical']}"),
+        ("glm_warm_model_serve", gb["warm_model_p50_ms"] * 1e3,
+         f"speedup={gb['speedup_x']}x model_hits={gb['model_hits']}"),
+        ("glm_sharded_replication", 0.0,
+         f"chosen={gc['chosen']} identical="
+         f"{gc['identical_to_oracle']}"),
+    ]
+
+
+if __name__ == "__main__":
+    if "--sharded-child" in sys.argv:
+        sys.path.insert(0, os.path.join(_ROOT, "src"))
+        rows = int(sys.argv[sys.argv.index("--sharded-child") + 1])
+        print(json.dumps(_sharded_child(rows)))
+    else:
+        main(smoke="--smoke" in sys.argv)

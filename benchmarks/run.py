@@ -16,6 +16,7 @@ def main() -> None:
     from benchmarks.paper_figures import ALL
     from benchmarks.bench_cache import cache_figures, subsumption_smoke
     from benchmarks.bench_join_duplicates import join_duplicates
+    from benchmarks.bench_glm import glm_smoke
     from benchmarks.bench_observability import (
         observability_figures, observability_smoke)
     from benchmarks.bench_qos import qos_figures, qos_smoke
@@ -46,11 +47,14 @@ def main() -> None:
         # scaling monotonicity, the shuffle/broadcast crossover, and
         # sharded-vs-oracle bit-identity; tiering_smoke hard-gates the
         # over-capacity spill sweep, the kill-and-restart warm start
-        # (real child processes), and demote-vs-evict hit rates
+        # (real child processes), and demote-vs-evict hit rates;
+        # glm_smoke hard-gates streamed-vs-eager training bit-identity,
+        # warm-model serving speedup, and the Fig. 10a sharded
+        # replication trade
         fns = [fn for fn in ALL if fn.__name__ in
                ("fig2_bandwidth", "tab3_roofline")] + \
               [subsumption_smoke, observability_smoke, qos_smoke,
-               shard_smoke, tiering_smoke]
+               shard_smoke, tiering_smoke, glm_smoke]
     if only:
         fns = [fn for fn in fns if only in fn.__name__]
 

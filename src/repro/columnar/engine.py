@@ -8,6 +8,7 @@ like MonetDB's optimizer picks the UDF implementation.
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -299,19 +300,33 @@ def aggregate_sum_stream(carry, values: jax.Array, mask: jax.Array,
 def train_glm_stream(table: Table, features: Sequence[str], label: str,
                      grid, plan: ChannelPlan, *, kind: str = "logreg",
                      epochs: int = 5, minibatch: int = 16,
-                     morsel_rows: Optional[int] = None):
+                     morsel_rows: Optional[int] = None,
+                     on_morsel=None):
     """Morsel-streamed hyper-parameter search: each epoch streams the
     morsels in table order with the K models' parameters as the carry, so
     the minibatch update sequence — and therefore the trained weights —
     matches ``train_glm`` exactly when morsels align with minibatches
-    (CoCoA-style block rotation with block = morsel)."""
+    (CoCoA-style block rotation with block = morsel).
+
+    Non-dividing row counts zero-pad ONLY the final morsel up to the next
+    minibatch multiple (never to a full morsel: a pure-pad minibatch
+    would still apply the l2 shrinkage step and perturb the weights).
+    Zero feature rows contribute exactly zero to the gradient numerator,
+    so the streamed minibatch sequence equals the eager path's
+    ``sgd_glm.pad_to_minibatch`` sequence on any row count; losses mask
+    the pad rows and divide by the true row count.
+
+    Morsels come from ``Table.morsel``, so host/disk-resident (spilled)
+    columns stream tier-aware: the numpy slice + H2D promotion happens
+    per morsel and the training set never has to fit on device whole.
+    ``on_morsel(n_bytes, seconds, tier)`` observes each promotion."""
     m = table.num_rows
-    assert m % minibatch == 0, (m, minibatch)
     if morsel_rows is None:
         morsel_rows = m
     morsel_rows = max((min(morsel_rows, m) // minibatch) * minibatch,
                       minibatch)
     spec = MorselSpec(m, morsel_rows)
+    cols = tuple(features) + (label,)
     k = len(grid)
     lrs = jnp.array([g.lr for g in grid], jnp.float32)
     l2s = jnp.array([g.l2 for g in grid], jnp.float32)
@@ -319,11 +334,22 @@ def train_glm_stream(table: Table, features: Sequence[str], label: str,
     rep = NamedSharding(plan.mesh, P())      # dataset replication (Fig. 10a)
 
     def morsel_arrays(i):
-        start, stop = spec.bounds(i)
-        a = jnp.stack([table.column(f)[start:stop].astype(jnp.float32)
+        t0 = time.perf_counter()
+        data, n_valid = table.morsel(spec, i, cols)
+        # Table.morsel pads the ragged tail to spec.rows; keep only up to
+        # the next minibatch multiple past the valid rows
+        rows_pad = -(-n_valid // minibatch) * minibatch
+        a = jnp.stack([jnp.asarray(data[f][:rows_pad]).astype(jnp.float32)
                        for f in features], axis=1)
-        b = table.column(label)[start:stop].astype(jnp.float32)
-        return jax.device_put(a, rep), jax.device_put(b, rep)
+        b = jnp.asarray(data[label][:rows_pad]).astype(jnp.float32)
+        a, b = jax.device_put(a, rep), jax.device_put(b, rep)
+        if on_morsel is not None:
+            jax.block_until_ready(b)
+            tiers = {table.column_tier(c) for c in cols}
+            worst = "disk" if "disk" in tiers else \
+                ("host" if "host" in tiers else "device")
+            on_morsel(a.nbytes + b.nbytes, time.perf_counter() - t0, worst)
+        return a, b, n_valid
 
     @jax.jit
     def epoch_step(xs, a_m, b_m):
@@ -333,7 +359,9 @@ def train_glm_stream(table: Table, features: Sequence[str], label: str,
         return jax.vmap(one)(xs, lrs, l2s)
 
     @jax.jit
-    def loss_step(acc, a_m, b_m, xs):
+    def loss_step(acc, a_m, b_m, n_valid, xs):
+        valid = (jnp.arange(a_m.shape[0]) < n_valid).astype(jnp.float32)
+
         def rowsum(x):
             z = a_m @ x
             if kind == "logreg":
@@ -343,16 +371,16 @@ def train_glm_stream(table: Table, features: Sequence[str], label: str,
                       + (1 - b_m) * jnp.log(1 - p + eps))
             else:
                 j = 0.5 * jnp.square(z - b_m)
-            return jnp.sum(j)
+            return jnp.sum(j * valid)
         return acc + jax.vmap(rowsum)(xs)
 
     for _ in range(epochs):
         for i in range(spec.n_morsels):
-            a_m, b_m = morsel_arrays(i)
+            a_m, b_m, _ = morsel_arrays(i)
             xs = epoch_step(xs, a_m, b_m)
     acc = jnp.zeros((k,), jnp.float32)
     for i in range(spec.n_morsels):
-        a_m, b_m = morsel_arrays(i)
-        acc = loss_step(acc, a_m, b_m, xs)
+        a_m, b_m, n_valid = morsel_arrays(i)
+        acc = loss_step(acc, a_m, b_m, jnp.int32(n_valid), xs)
     losses = acc / m + l2s * jnp.sum(jnp.square(xs), axis=1)
     return xs, losses

@@ -32,6 +32,25 @@ class HyperParams:
     l2: float
 
 
+def pad_to_minibatch(a, b, minibatch: int):
+    """Zero-pad (a, b) to the next multiple of ``minibatch``.
+
+    Zero feature rows contribute exactly zero to the minibatch gradient
+    numerator ``aᵀ(link(a@x) - b)`` for both ridge and logreg (every
+    product term carries a zero feature), while the divisor stays the
+    nominal minibatch — i.e. the tail rows are folded into one final
+    partial minibatch of zero-weight rows.  Losses must still be
+    computed over the UNPADDED rows (a logreg pad row would add
+    ``-log(0.5)`` per row)."""
+    m = a.shape[0]
+    pad = (-m) % minibatch
+    if pad == 0:
+        return a, b
+    a = jnp.concatenate([a, jnp.zeros((pad, a.shape[1]), a.dtype)])
+    b = jnp.concatenate([b, jnp.zeros((pad,), b.dtype)])
+    return a, b
+
+
 def hyperparam_search(a, b, grid: Sequence[HyperParams], plan: ChannelPlan,
                       *, minibatch: int = 16, epochs: int = 10,
                       kind: str = "logreg", impl: str = "xla",
@@ -51,13 +70,17 @@ def hyperparam_search(a, b, grid: Sequence[HyperParams], plan: ChannelPlan,
     l2s = jnp.array([g.l2 for g in grid] + [grid[0].l2] * (k_pad - k),
                     jnp.float32).reshape(n_eng, jobs_per_eng)
     n = a.shape[1]
+    # non-dividing row counts: train on the zero-padded dataset (the tail
+    # folds into one partial minibatch of zero-weight rows), score the loss
+    # on the original rows only
+    a_t, b_t = pad_to_minibatch(a, b, minibatch)
 
     def engine(lr_local, l2_local):
         # one engine trains its jobs sequentially on its LOCAL dataset copy
         def one(lr, l2):
             x0 = jnp.zeros((n,), jnp.float32)
             # lr/l2 are traced per-job values: fold into data, not statics
-            x = _sgd_dynamic(a, b, x0, lr, l2, minibatch=minibatch,
+            x = _sgd_dynamic(a_t, b_t, x0, lr, l2, minibatch=minibatch,
                              epochs=epochs, kind=kind)
             return x, sgd_ref.loss_ref(a, b, x, l2=l2, kind=kind)
 

@@ -681,15 +681,21 @@ class SemanticCache:
         total = self.hits + self.misses
         by_kind: Dict[str, int] = {}
         by_tier: Dict[str, int] = {}
+        bytes_by_kind: Dict[str, int] = {}
         for e in self._entries.values():
             by_kind[e.kind] = by_kind.get(e.kind, 0) + 1
             by_tier[e.tier] = by_tier.get(e.tier, 0) + 1
+            bytes_by_kind[e.kind] = bytes_by_kind.get(e.kind, 0) \
+                + int(e.n_bytes)
         return {
             "semantic_cache_subsumption_hits": self.subsumption_hits,
             "semantic_cache_subsumption_misses": self.subsumption_misses,
             "semantic_cache_interval_buckets": len(self._intervals),
             "semantic_cache_entries": len(self._entries),
             "semantic_cache_entries_by_kind": by_kind,
+            # residency by kind: the paper-§VI serving question "how much
+            # budget do trained models actually occupy vs results/builds"
+            "semantic_cache_bytes_by_kind": bytes_by_kind,
             "semantic_cache_used_bytes": self.used_bytes,
             "semantic_cache_budget_bytes": self.budget_bytes,
             "semantic_cache_entries_by_tier": by_tier,

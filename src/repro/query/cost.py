@@ -173,6 +173,9 @@ def estimate_rows(node: L.Node, stats: Dict[str, TableStats],
         return l * matches * frac
     if isinstance(node, L.Project):
         return estimate_rows(node.child, stats, corrections)
+    if isinstance(node, L.ScoreGLM):
+        # one prediction per input row
+        return estimate_rows(node.child, stats, corrections)
     if isinstance(node, (L.Aggregate, L.TrainGLM)):
         return 1.0
     raise TypeError(node)
@@ -791,23 +794,64 @@ def plan_physical(node: L.Node, stats: Dict[str, TableStats],
         k = len(node.grid)
         d = len(node.features)
         dataset = in_rows * BYTES_PER_VALUE * (d + 1)
+        epoch_bytes = dataset * node.epochs * k
         # each engine streams its LOCAL replica (Fig. 10a); without
         # replication every job reads one remote copy — the flat line
         flops = 6.0 * node.epochs * k * in_rows * d
         alts = {
             "xla/replicated": model.broadcast_cost(dataset)
-            + model.stream_cost(dataset * node.epochs * k,
-                                impl="xla", placement="partitioned",
-                                flops=flops),
+            + model.stream_cost(epoch_bytes, impl="xla",
+                                placement="partitioned", flops=flops),
             "xla/congested": model.stream_cost(
-                dataset * node.epochs * k, impl="xla",
-                placement="congested", flops=flops),
+                epoch_bytes, impl="xla", placement="congested", flops=flops),
         }
+        shard_strategy = None
+        if model.n_shards > 1:
+            # Fig. 10a on the shard mesh: pay the interconnect once to
+            # replicate the training set to every shard, then every epoch
+            # streams the LOCAL replica at sharded aggregate bandwidth —
+            # priced against the congested baseline where all K jobs
+            # contend for a single remote copy
+            alts["shard/replicated"] = model.shard_broadcast_cost(dataset) \
+                + model.stream_cost(epoch_bytes, impl="xla",
+                                    placement="sharded", flops=flops)
         best = min(alts, key=alts.get)
         impl, pl = best.split("/")
-        return PhysNode("train_glm", node, impl, pl, 1, float(k),
+        if impl == "shard":
+            impl, pl, shard_strategy = "xla", "sharded", best.split("/")[1]
+        # streaming granularity for the epoch loop: each epoch re-streams
+        # the training set, so the morsel argmin prices the per-pass
+        # feature+label bytes with the per-row SGD flops
+        base = probe_base_scan(node.child)
+        morsel_rows = None
+        if base is not None and base.table in stats:
+            align = math.lcm(model.n_engines, model.n_shards) \
+                if model.n_shards > 1 else None
+            morsel_rows = model.choose_morsel_rows(
+                stats[base.table].num_rows, d + 1, impl=impl, align=align,
+                flops_per_row=6.0 * k * d)
+        # est_rows_out is a CARDINALITY (one weight vector row per grid
+        # entry would still collapse to a scalar-ish result; the planner
+        # treats training like an aggregate root) — the grid size lives
+        # in the priced bytes/flops, not the selectivity slot
+        return PhysNode("train_glm", node, impl, pl, 1, 1.0,
                         alts[best], model.bandwidth_gbps(pl), alts, (child,),
-                        n_bytes=dataset * node.epochs * k)
+                        morsel_rows=morsel_rows, n_bytes=epoch_bytes,
+                        shard_strategy=shard_strategy)
+
+    if isinstance(node, L.ScoreGLM):
+        child = plan_physical(node.child, stats, model, role=role)
+        d = len(node.features)
+        in_rows = estimate_rows(node.child, stats, corr)
+        # one pass over the feature columns plus the written score column;
+        # the cached weight vector is noise
+        n_bytes = in_rows * BYTES_PER_VALUE * d + rows * BYTES_PER_VALUE
+        impl, pl, cost, alts = _choose(model, n_bytes,
+                                       _stream_placements(model)[:1],
+                                       flops=2.0 * in_rows * d)
+        return PhysNode("score_glm", node, impl, pl, 1, rows, cost,
+                        model.bandwidth_gbps(pl), alts, (child,),
+                        n_bytes=n_bytes)
 
     raise TypeError(node)
 
@@ -818,7 +862,7 @@ def probe_base_scan(node: L.Node) -> Optional[L.Scan]:
     children (Join.left) down to the leaf."""
     while not isinstance(node, L.Scan):
         if isinstance(node, (L.Filter, L.FilterProject, L.Project,
-                             L.Aggregate, L.TrainGLM)):
+                             L.Aggregate, L.TrainGLM, L.ScoreGLM)):
             node = node.child
         elif isinstance(node, L.Join):
             node = node.left

@@ -156,6 +156,8 @@ class Executor:
                             "semantic cache: eager intermediates")
     build_hits = _counter("exec.build_cache_hits",
                           "semantic cache: join builds")
+    model_hits = _counter("exec.model_cache_hits",
+                          "semantic cache: trained GLM weights")
     subsumption_hits = _counter("exec.subsumption_hits",
                                 "selections served by refinement")
     refine_bytes_streamed = _counter(
@@ -273,7 +275,8 @@ class Executor:
     _COUNTERS = (
         "exec.plan_cache_hits", "exec.plan_cache_misses",
         "exec.result_cache_hits", "exec.subplan_cache_hits",
-        "exec.build_cache_hits", "exec.subsumption_hits",
+        "exec.build_cache_hits", "exec.model_cache_hits",
+        "exec.subsumption_hits",
         "exec.refine_bytes_streamed", "exec.refine_bytes_avoided",
         "exec.trace_count", "exec.refine_routed")
 
@@ -501,6 +504,21 @@ class Executor:
             # streamable spine reroutes onto the morsel driver, which
             # promotes lower-tier morsels through the prefetch thread
             spill = self._maybe_spill(node)
+            # TrainGLM roots lower onto the morsel-streamed trainer (the
+            # paper's workload 3): per-epoch passes with the model
+            # weights as the only cross-morsel carry — bit-identical to
+            # the whole-column eager path, so forced-eager stays the
+            # observability oracle while batch/stream never materialize
+            # the training set on device at once
+            if mode != "eager":
+                tplan = pl.analyze_train(node, self.catalog.stats)
+                if tplan is not None:
+                    sp.set(path="train_stream")
+                    value = self._run_train(node, phys, tplan,
+                                            morsel_rows, spill=spill)
+                    self._admit_result(orig, node, phys, value)
+                    return Result(value, phys, False,
+                                  time.perf_counter() - t0, mode="stream")
             if mode == "batch" and spill is not None:
                 splan = pl.analyze(node, self.catalog.stats)
                 if splan is not None:
@@ -546,10 +564,22 @@ class Executor:
         physical plan's modeled recompute cost."""
         if self.cache is None:
             return
-        self.cache.put(("result", self.fingerprint_of(orig)), value,
+        fp = self.fingerprint_of(orig)
+        self.cache.put(("result", fp), value,
                        kind="result", n_bytes=_value_nbytes(value),
                        recompute_s=phys.total_cost_s,
                        tables=L.tables_of(opt), tenant=self.tenant)
+        if isinstance(opt, L.TrainGLM):
+            # trained weights double as a SERVABLE MODEL: ScoreGLM plans
+            # resolve them by this fingerprint, which embeds the training
+            # tables' versions — a mutation strands the entry and the
+            # next score retrains.  A tiny residency (K x d floats) buys
+            # back the full epochs x dataset recompute, so eviction
+            # fights strongly favor keeping models
+            self.cache.put(("model", fp), value, kind="model",
+                           n_bytes=_value_nbytes(value),
+                           recompute_s=phys.total_cost_s,
+                           tables=L.tables_of(opt), tenant=self.tenant)
 
     def plan(self, node: L.Node):
         """optimize + plan_physical, memoized by the (hashable) logical
@@ -782,10 +812,20 @@ class Executor:
             breakers = splan.breakers
         else:
             pplan = pl.analyze_project(node, self.catalog.stats)
-            if pplan is None:
-                return None
-            table, cols = pplan.base_scan.table, pplan.stream_cols
-            breakers = pplan.breakers
+            if pplan is not None:
+                table, cols = pplan.base_scan.table, pplan.stream_cols
+                breakers = pplan.breakers
+            else:
+                # scan-rooted training sets spill too: epochs stream
+                # morsels straight off the (demoted) catalog columns, so
+                # an over-budget dataset trains out of core instead of
+                # dying in placed().  Filtered trains are excluded — they
+                # materialize a compacted (smaller) transient set first
+                tplan = pl.analyze_train(node, self.catalog.stats)
+                if tplan is None or tplan.filtered:
+                    return None
+                table, cols = tplan.base_scan.table, tplan.stream_cols
+                breakers = ()
         tab = self.catalog.tables[table]
         sizes = [((table, c), int(tab.columns[c].nbytes)) for c in cols]
         if not any(n > budget for _, n in sizes):
@@ -957,6 +997,70 @@ class Executor:
                                         shards=self.n_shards)
             self._record_promotions(promote, mode="stream")
         return value
+
+    def _run_train(self, node: L.TrainGLM, phys: Optional[PhysNode],
+                   tplan: pl.TrainStreamPlan,
+                   morsel_rows: Optional[int],
+                   spill: Optional[SpillPlan] = None):
+        """TrainGLM-rooted streamed execution (paper §VI, workload 3):
+        every epoch streams the training set morsel by morsel through the
+        K-model SGD step with the weights as the only cross-morsel carry,
+        so the result is bit-identical to the whole-column eager path
+        while the dataset is never device-resident at once.  A filter
+        under the train root materializes the selected rows ONCE (the
+        pipeline breaker: streamed compaction would make minibatch
+        boundaries data-dependent) and epochs stream off that transient
+        table; a bare scan streams straight off the catalog table,
+        tier-aware — which is what lets an over-budget training set ride
+        the spill plan's host/disk demotions instead of raising."""
+        if tplan.filtered:
+            child_phys = phys.children[0] if phys and phys.children \
+                else None
+            source = self._run_eager(node.child, child_phys)
+        else:
+            source = self.catalog.tables[tplan.base_scan.table]
+        cap = self.placement_capacity_bytes
+        n_cols = len(tplan.stream_cols)
+        target = morsel_rows or (phys.morsel_rows if phys else None)
+        if target is not None and morsel_rows is None and cap is not None:
+            target = self._clamp_spec(
+                MorselSpec(source.num_rows, target), n_cols, cap).rows
+        cplan = self.plans.get(phys.placement if phys else "partitioned",
+                               self.plans["partitioned"])
+        if not self.tel.enabled:
+            return engine.train_glm_stream(
+                source, list(node.features), node.label, list(node.grid),
+                cplan, kind=node.kind, epochs=node.epochs,
+                morsel_rows=target)
+        promote = {"host": [0, 0.0], "disk": [0, 0.0]}
+
+        def on_morsel(n_bytes, seconds, tier):
+            if tier != "device":
+                acc = promote.setdefault(tier, [0, 0.0])
+                acc[0] += n_bytes
+                acc[1] += seconds
+                self.metrics.inc(f"exec.promote_bytes.{tier}", n_bytes)
+
+        with self.tel.span("exec.run_train", epochs=node.epochs,
+                           k=len(node.grid),
+                           morsel_rows=target or source.num_rows) as sp:
+            t0 = time.perf_counter()
+            value = engine.train_glm_stream(
+                source, list(node.features), node.label, list(node.grid),
+                cplan, kind=node.kind, epochs=node.epochs,
+                morsel_rows=target, on_morsel=on_morsel)
+            jax.block_until_ready(value)
+            dt = time.perf_counter() - t0
+            # mirror the cost formula with actual cardinality (the same
+            # convention as _eager_measured_bytes) so ledger drift
+            # isolates estimation error from bandwidth-model error
+            moved = source.num_rows * BYTES_PER_VALUE * n_cols \
+                * node.epochs * len(node.grid)
+            sp.set(measured_s=dt, measured_bytes=moved)
+            self.tel.ledger.record_plan(phys, dt, moved, mode="stream",
+                                        shards=self.n_shards)
+            self._record_promotions(promote, mode="stream")
+            return value
 
     def morsel_spec(self, table: str, target: Optional[int] = None,
                     n_cols: int = 2, src_tier: str = "host") -> MorselSpec:
@@ -1271,13 +1375,60 @@ class Executor:
                 raise ValueError(n.op)
             if isinstance(n, L.TrainGLM):
                 t = eval_cached(n.child)
+                # the plan the cost model actually chose, not a
+                # hard-coded partitioned mesh: explain() and execution
+                # now agree.  partitioned/replicated/congested share one
+                # mesh+axis (results identical — only transfer pricing
+                # differs); "sharded" rides the shard mesh, where the
+                # per-engine job partition preserves per-model bitwise
+                # results
+                d = decisions.get(n)
+                cplan = self.plans.get(
+                    d.placement if d is not None else "partitioned",
+                    self.plans["partitioned"])
                 return engine.train_glm(t, list(n.features), n.label,
-                                        list(n.grid),
-                                        self.plans["partitioned"],
+                                        list(n.grid), cplan,
                                         kind=n.kind, epochs=n.epochs)
+            if isinstance(n, L.ScoreGLM):
+                t = eval_cached(n.child)
+                xs, losses = self._resolve_model(n, phys)
+                idx = int(n.select) if n.select >= 0 \
+                    else int(jnp.argmin(losses))
+                x = xs[idx]
+                a = jnp.stack([t.column(f).astype(jnp.float32)
+                               for f in n.features], axis=1)
+                z = a @ x
+                s = jax.nn.sigmoid(z) if n.kind == "logreg" else z
+                return Table("score", {"score": Column(s, "score")})
             raise TypeError(n)
 
         return traced_eval(node)
+
+    def _resolve_model(self, n: L.ScoreGLM,
+                       phys: Optional[PhysNode]) -> tuple:
+        """Weights for a ScoreGLM: the semantic cache under the defining
+        train plan's fingerprint (versions embedded, so any training-
+        table mutation strands the entry), else train fresh through the
+        normal execute path — which admits the model for the next score.
+        The naive oracle (``phys is None``) neither reads nor feeds the
+        cache: it always trains inline."""
+        fp = n.model_fp or (self.fingerprint_of(n.train)
+                            if n.train is not None else "")
+        if phys is not None and self.cache is not None and fp:
+            entry = self.cache.get(("model", fp))
+            if entry is not None:
+                self.metrics.inc("exec.model_cache_hits")
+                self.tel.instant("exec.model_hit", fingerprint=fp[:16])
+                return entry.value
+        if n.train is None:
+            raise KeyError(
+                f"score_glm: no cached model under fingerprint {fp!r} "
+                "and no defining train plan to fall back to — train "
+                "first (with a semantic cache installed) or score with "
+                "the TrainGLM plan instead of a raw fingerprint")
+        if phys is None:
+            return self._run_eager(n.train, None)
+        return self.execute(n.train).value
 
     def _filter_table(self, t: Table, column: str, lo: int, hi: int,
                       keep: Tuple[str, ...], *, impl: str = "xla",
@@ -1421,6 +1572,7 @@ class Executor:
             "result_cache_hits": self.result_hits,
             "subplan_cache_hits": self.subplan_hits,
             "build_cache_hits": self.build_hits,
+            "model_cache_hits": self.model_hits,
             "subsumption_hits": self.subsumption_hits,
             "refine_bytes_streamed": self.refine_bytes_streamed,
             "refine_bytes_avoided": self.refine_bytes_avoided,
@@ -1502,6 +1654,8 @@ def _eager_measured_bytes(d: PhysNode, out, child_outs) -> float:
         n = d.logical
         dataset = in_rows * B * (len(n.features) + 1)
         return dataset * n.epochs * len(n.grid)
+    if d.op == "score_glm":
+        return in_rows * B * len(d.logical.features) + rows_out * B
     return float(d.n_bytes)     # unknown op: mirror the prediction
 
 

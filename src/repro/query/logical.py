@@ -84,6 +84,25 @@ class TrainGLM(Node):
     epochs: int = 5
 
 
+@dataclasses.dataclass(frozen=True)
+class ScoreGLM(Node):
+    """Model serving (paper §VI): evaluate a trained GLM over fresh rows.
+
+    ``train`` names the model by its defining plan — the executor
+    resolves it to cached weights through the model fingerprint, which
+    embeds the training tables' versions, so any mutation makes the
+    cached model unreachable and forces a fresh train.  ``model_fp``
+    instead pins a raw fingerprint (lookup-only: scoring fails if no
+    such model is cached).  ``select`` picks the grid entry whose
+    weights score; negative selects the best model by final loss."""
+    child: Node
+    features: Tuple[str, ...]
+    train: Optional[TrainGLM] = None
+    model_fp: str = ""
+    select: int = -1
+    kind: str = "logreg"
+
+
 class Q:
     """Fluent builder: ``Q.scan("lineitem").filter("qty", 30, 49)...``"""
 
@@ -121,6 +140,30 @@ class Q:
                   epochs: int = 5) -> "Q":
         return Q(TrainGLM(self.node, tuple(features), label, tuple(grid),
                           kind, epochs))
+
+    def score_glm(self, model, features: Optional[Sequence[str]] = None,
+                  *, select: int = -1, kind: Optional[str] = None) -> "Q":
+        """Evaluate a trained GLM over this plan's rows.  ``model`` is
+        either a TrainGLM plan (or a ``Q`` wrapping one) — scored with
+        its cached weights, retrained on a cache miss — or a raw model
+        fingerprint string (lookup-only).  ``select`` picks the grid
+        entry; negative = best by final training loss."""
+        if isinstance(model, Q):
+            model = model.node
+        if isinstance(model, TrainGLM):
+            feats = tuple(features) if features is not None \
+                else model.features
+            return Q(ScoreGLM(self.node, feats, model, "", int(select),
+                              kind if kind is not None else model.kind))
+        if features is None:
+            raise ValueError(
+                "score_glm with a raw fingerprint needs explicit features")
+        return Q(ScoreGLM(self.node, tuple(features), None, str(model),
+                          int(select), kind if kind is not None
+                          else "logreg"))
+
+    # the dashboard spelling: Q.scan(...).score(model_fp, features)
+    score = score_glm
 
 
 # --------------------------------------------------------------------------- #
@@ -180,6 +223,8 @@ def output_columns(node: Node, table_columns) -> Tuple[str, ...]:
         return (node.column,)
     if isinstance(node, TrainGLM):
         return node.features + (node.label,)
+    if isinstance(node, ScoreGLM):
+        return ("score",)
     raise TypeError(node)
 
 
@@ -244,6 +289,8 @@ def _known_cols(node: Node):
         return {node.column}
     if isinstance(node, TrainGLM):
         return set(node.features) | {node.label}
+    if isinstance(node, ScoreGLM):
+        return {"score"}
     return None
 
 

@@ -98,6 +98,16 @@ def prune_columns(node: L.Node, stats: Dict[str, TableStats],
         need = set(node.features) | {node.label}
         return dataclasses.replace(
             node, child=prune_columns(node.child, stats, need))
+    if isinstance(node, L.ScoreGLM):
+        # the scored rows need only the feature columns; the (optional)
+        # defining train plan prunes as its own root
+        out = dataclasses.replace(
+            node, child=prune_columns(node.child, stats,
+                                      set(node.features)))
+        if node.train is not None:
+            out = dataclasses.replace(
+                out, train=prune_columns(node.train, stats))
+        return out
     return _rewrite_children(node, lambda c: prune_columns(c, stats,
                                                            required))
 

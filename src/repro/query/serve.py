@@ -998,6 +998,9 @@ class QueryServer:
             "latency_max_s": lat[-1] if lat else 0.0,
             "n_recalibrations": self.n_recalibrations,
             "n_backpressured": self.n_backpressured,
+            # warm-model serving (paper §VI): scores answered from cached
+            # GLM weights instead of a per-query retrain
+            "n_model_hits": self.executor.model_hits,
         }
         by_tenant: Dict[str, dict] = {}
         for rec in self.history:

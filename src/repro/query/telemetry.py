@@ -585,13 +585,21 @@ def _walk(p):
 
 
 def _filter_attribution(p) -> Tuple[str, str]:
-    """(table, column) of a filter PhysNode's predicate, "" otherwise.
+    """(table, column) a PhysNode's traffic is attributed to, "" for ops
+    with no single attributable column.  Filters attribute to their
+    predicate column; GLM training to its label column (the training
+    set's identity for dashboards); scoring to its emitted "score".
     Walks the logical child chain structurally (child / probe-side left)
     to the base Scan, so telemetry needs no import of the plan DSL."""
-    if p.op not in ("filter", "filter_project"):
+    if p.op not in ("filter", "filter_project", "train_glm", "score_glm"):
         return "", ""
     node = getattr(p, "logical", None)
-    column = getattr(node, "column", "") or ""
+    if p.op == "train_glm":
+        column = getattr(node, "label", "") or ""
+    elif p.op == "score_glm":
+        column = "score"
+    else:
+        column = getattr(node, "column", "") or ""
     n = getattr(node, "child", None)
     while n is not None and not hasattr(n, "table"):
         n = getattr(n, "child", None) or getattr(n, "left", None)
